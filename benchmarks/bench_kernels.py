@@ -1,0 +1,74 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU) vs jnp oracles.
+
+On CPU, interpret-mode kernels are expected to be SLOWER than the fused jnp
+oracle — the numbers here are correctness/overhead tracking, not TPU perf;
+the TPU target engages via Mosaic on real hardware.  Derived column carries
+the oracle time for the ratio.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.flash_attention.ops import flash_attention as fa
+    from repro.models.attention import naive_attention
+    q = jnp.asarray(rng.normal(size=(1, 256, 2, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    us_k = timeit(lambda: jax.block_until_ready(fa(q, k, v, causal=True)), iters=3)
+    ref = jax.jit(lambda a, b, c: naive_attention(a, b, c, causal=True))
+    us_r = timeit(lambda: jax.block_until_ready(ref(q, k, v)), iters=3)
+    emit("kernel_flash_attention", us_k, f"oracle_us={us_r:.0f}")
+
+    from repro.kernels.accumulate.ops import accumulate as acc
+    from repro.kernels.accumulate.ref import accumulate_ref
+    x = jnp.asarray(rng.normal(size=(16, 65536)), jnp.float32)
+    us_k = timeit(lambda: jax.block_until_ready(acc(x)), iters=3)
+    refj = jax.jit(accumulate_ref)
+    us_r = timeit(lambda: jax.block_until_ready(refj(x)), iters=3)
+    emit("kernel_accumulate", us_k, f"oracle_us={us_r:.0f}")
+
+    from repro.kernels.topk_compress.ops import topk_compress
+    v1 = jnp.asarray(rng.normal(size=(65536,)), jnp.float32)
+    us_k = timeit(lambda: jax.block_until_ready(topk_compress(v1, k_per_block=16)), iters=3)
+    emit("kernel_topk_compress", us_k, "k_per_block=16")
+
+    from repro.kernels.sparse_update.ops import scatter_add
+    idx = jnp.asarray(rng.integers(0, 65536, size=(1024,)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(1024,)), jnp.float32)
+    us_k = timeit(lambda: jax.block_until_ready(scatter_add(idx, vals, out_len=65536)), iters=3)
+    emit("kernel_sparse_update", us_k, "M=1024,V=65536")
+
+    from repro.kernels.kmeans_assign.ops import kmeans_assign
+    pts = jnp.asarray(rng.normal(size=(8192, 64)), jnp.float32)
+    ctr = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    us_k = timeit(lambda: jax.block_until_ready(kmeans_assign(pts, ctr)), iters=3)
+    emit("kernel_kmeans_assign", us_k, "N=8192,K=32,D=64")
+
+    from repro.kernels.ssd_scan.ops import ssd
+    from repro.models.mamba import ssd_chunked
+    b, T, H, P, G, N = 1, 512, 4, 32, 1, 32
+    xs = jnp.asarray(rng.normal(size=(b, T, H, P)), jnp.float32) * 0.3
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, T, H))) * 0.3 + 0.1, jnp.float32)
+    A_log = jnp.asarray(np.log(np.linspace(1.0, 4.0, H)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, T, G, N)), jnp.float32) * 0.3
+    C = jnp.asarray(rng.normal(size=(b, T, G, N)), jnp.float32) * 0.3
+    us_k = timeit(lambda: jax.block_until_ready(ssd(xs, dt, A_log, B, C, chunk=64)[0]), iters=3)
+    refj = jax.jit(lambda *a: ssd_chunked(*a, chunk=64)[0])
+    us_r = timeit(lambda: jax.block_until_ready(refj(xs, dt, A_log, B, C)), iters=3)
+    emit("kernel_ssd_scan", us_k, f"oracle_us={us_r:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one sub-benchmark per paper table/figure.
+
+Each module runs in its own subprocess (so it can force its own device count
+before importing jax) and prints ``name,us_per_call,derived`` CSV rows, which
+this driver aggregates.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only accumulator
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+BENCHES = [
+    ("dsm_modes", "benchmarks.bench_dsm_modes"),            # Fig. 3
+    ("accumulator", "benchmarks.bench_accumulator"),        # §5.2 traffic claim
+    ("apps", "benchmarks.bench_apps"),                      # Figs. 4–10
+    ("fault_tolerance", "benchmarks.bench_fault_tolerance"),  # Fig. 11
+    ("kernels", "benchmarks.bench_kernels"),                # Pallas μs/call
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on bench name")
+    args = ap.parse_args()
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, module in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        proc = subprocess.run([sys.executable, "-m", module], env=env, cwd=root,
+                              capture_output=True, text=True, timeout=1800)
+        out = proc.stdout.strip()
+        if out:
+            print(out, flush=True)
+        if proc.returncode != 0:
+            failures.append(name)
+            print(f"# {name} FAILED (exit {proc.returncode}):", flush=True)
+            print("\n".join("#   " + l for l in proc.stderr.strip().splitlines()[-12:]),
+                  flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}", flush=True)
+        sys.exit(1)
+    print("# all benchmarks OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""PageRank over a power-law graph (paper §6.7) with the auto accumulator.
+
+Shows the paper's sparse/auto accumulator decision in action: threads owning
+edges with concentrated destinations produce sparse credit vectors, and the
+``auto`` mode ships (index, value) pairs only when cheaper.
+
+    PYTHONPATH=src python examples/pagerank_graph.py
+"""
+
+import numpy as np
+
+from repro.analytics import pagerank
+from repro.core import AccumMode
+from repro.data import powerlaw_graph
+
+
+def main():
+    n_vertices = 2000
+    edges = powerlaw_graph(n_vertices, avg_degree=8, seed=0)
+    print(f"graph: {n_vertices} vertices, {edges.shape[0]} edges")
+
+    ref = pagerank.fit_reference(edges, n_vertices, iters=15)
+    for mode in (AccumMode.GATHER_ALL, AccumMode.REDUCE_SCATTER, AccumMode.AUTO):
+        ranks, _store, accu = pagerank.fit_threads(
+            edges, n_vertices, n_nodes=2, threads_per_node=2, iters=15, mode=mode)
+        drift = float(np.max(np.abs(ranks - ref)))
+        print(f"[{mode.value:>14s}] top vertex {int(np.argmax(ranks))} "
+              f"drift {drift:.2e} wire {accu.bytes_transferred:>9d} elems")
+    print("top-5 ranked vertices:", np.argsort(-ref)[:5].tolist())
+
+
+if __name__ == "__main__":
+    main()

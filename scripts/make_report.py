@@ -1,0 +1,101 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the JSONs.
+
+    PYTHONPATH=src python scripts/make_report.py [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ARCH_ORDER = ["deepseek-v3-671b", "moonshot-v1-16b-a3b", "starcoder2-3b",
+              "qwen3-4b", "qwen2-72b", "qwen3-1.7b", "llama-3.2-vision-90b",
+              "zamba2-2.7b", "hubert-xlarge", "mamba2-2.7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir):
+    from repro.configs import SHAPES, get_arch
+    from repro.launch.roofline import model_flops
+
+    recs, skips = {}, {}
+    for fn in os.listdir(out_dir):
+        if not fn.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(out_dir, fn)))
+        key = (r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+        if r.get("skipped"):
+            skips[key] = r
+        else:
+            # recompute MODEL_FLOPS/useful with the *current* formula so all
+            # rows are mutually consistent regardless of when they were run
+            mf = model_flops(get_arch(r["arch"]), SHAPES[r["shape"]])
+            r["model_flops_total"] = mf
+            if r["hlo_flops"]:
+                r["useful_ratio"] = (mf / r["n_devices"]) / r["hlo_flops"]
+            recs[key] = r
+    return recs, skips
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def improvement_note(r):
+    """One sentence on what moves the dominant term down."""
+    b = r["bottleneck"]
+    shape = r["shape"]
+    if b == "memory":
+        if "decode" in shape or "long" in shape:
+            return "decode is cache-read bound: shrink per-token cache reads (MLA/SSM already minimal; quantize KV to int8)"
+        return "cut HBM traffic: fuse attention internals into the Pallas flash kernel (keeps scores in VMEM) + bf16 intermediates"
+    if b == "collective":
+        return "cut TP collectives: bf16 all-reduce, sequence-sharded activations (AG/RS decomposition), hierarchical cross-pod reduce"
+    return "compute-bound: raise MXU utilisation (bigger per-device tiles, skip causal-masked blocks, fewer remat recomputes)"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    recs, skips = load(args.out)
+
+    print("### Dry-run matrix (lower+compile status, bytes/device)\n")
+    print("| arch | shape | single-pod (256) | multi-pod (512) |")
+    print("|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            cells = []
+            for mesh in ("single", "multi"):
+                k = (a, s, mesh, args.variant)
+                if k in recs:
+                    r = recs[k]
+                    cells.append(f"OK — peak {fmt_bytes(r['peak_bytes'])} GiB, "
+                                 f"{r['collective_by_op'] and '+'.join(sorted(r['collective_by_op'])) or 'no-coll'}")
+                elif k in skips:
+                    cells.append(f"SKIP ({skips[k]['reason'].split(':')[0]})")
+                else:
+                    cells.append("—")
+            print(f"| {a} | {s} | {cells[0]} | {cells[1]} |")
+
+    print("\n### Roofline (single-pod, per device, baseline)\n")
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) | bottleneck | MODEL_FLOPS | useful | peak GiB | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            k = (a, s, "single", args.variant)
+            if k in recs:
+                r = recs[k]
+                print(f"| {a} | {s} | {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+                      f"{r['collective_s']*1e3:.2f} | **{r['bottleneck']}** | "
+                      f"{r['model_flops_total']:.2e} | {r['useful_ratio']:.3f} | "
+                      f"{fmt_bytes(r['peak_bytes'])} | {improvement_note(r)} |")
+            elif k in skips:
+                print(f"| {a} | {s} | — | — | — | skipped | — | — | — | {skips[k]['reason']} |")
+
+
+if __name__ == "__main__":
+    main()

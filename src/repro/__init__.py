@@ -1,0 +1,15 @@
+"""STEP-JAX: a distributed multi-threading framework for data analytics on TPU pods.
+
+Reproduction + TPU-native adaptation of:
+  "STEP: A Distributed Multi-threading Framework Towards Efficient Data Analytics"
+  (Mei, Shen, Zhu, Huang - SJTU, 2018).
+
+Public surface:
+  repro.core       - DSM GlobalStore, DAddAccumulator, sync, threads, cache
+  repro.optim      - optimizers, ZeRO-1 (accumulator-sharded), compression
+  repro.models     - the assigned LM architectures
+  repro.analytics  - the paper's four applications (logreg/kmeans/nmf/pagerank)
+  repro.launch     - mesh / dryrun / roofline / train / serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+"""The paper's four applications (logreg / kmeans / nmf / pagerank), each in
+three forms: fit_reference (single-thread oracle), fit_threads (the paper's
+Pthreads-style DThread + DSM + accumulator programming model), and fit_spmd
+(shard_map production path)."""
+
+from repro.analytics import kmeans, logreg, nmf, pagerank
+
+__all__ = ["kmeans", "logreg", "nmf", "pagerank"]

@@ -1,0 +1,123 @@
+"""K-means (paper §6.5): Lloyd iterations over partitioned points.
+
+Per iteration, each thread assigns its points to the nearest center (the
+``kmeans_assign`` Pallas kernel is the TPU hot loop), builds per-cluster
+partial sums + counts, and ships them through the accumulator — the shared
+centers in DSM are then ``sum / count``.  Exactly the Petuum/paper algorithm,
+with the accumulator replacing the parameter server.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate
+from repro.core.threads import DThreadPool
+from repro.data.pipeline import partition_rows
+
+
+@jax.jit
+def _assign(points, centers):
+    d2 = (jnp.sum(points**2, axis=1, keepdims=True)
+          - 2.0 * points @ centers.T + jnp.sum(centers**2, axis=1)[None])
+    return jnp.argmin(d2, axis=1), jnp.min(d2, axis=1)
+
+
+def _partials(points, assign, k):
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)      # (n, k)
+    sums = onehot.T @ points                                    # (k, d)
+    counts = jnp.sum(onehot, axis=0)                            # (k,)
+    return sums, counts
+
+
+def inertia(points, centers) -> float:
+    _, d = _assign(jnp.asarray(points), jnp.asarray(centers))
+    return float(jnp.sum(d))
+
+
+def fit_reference(x, k: int, iters: int = 10, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    centers = jnp.asarray(x[rng.choice(x.shape[0], k, replace=False)])
+    xj = jnp.asarray(x)
+    for _ in range(iters):
+        a, _ = _assign(xj, centers)
+        sums, counts = _partials(xj, a, k)
+        centers = sums / jnp.maximum(counts[:, None], 1.0)
+    return np.asarray(centers)
+
+
+def fit_threads(x, k: int, *, n_nodes: int = 2, threads_per_node: int = 2,
+                iters: int = 10, seed: int = 0,
+                mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
+                use_kernel: bool = False):
+    """Paper programming model: threads + DSM centers + accumulator."""
+    store = GlobalStore()
+    rng = np.random.default_rng(seed)
+    d = x.shape[1]
+    init_centers = x[rng.choice(x.shape[0], k, replace=False)]
+    store.def_global("centers", jnp.asarray(init_centers))
+    store.new_array("partials", (k * (d + 1),))
+    pool = DThreadPool(n_nodes, threads_per_node)
+    accu = DAddAccumulator(store, "partials", pool.n_threads, n_nodes, mode)
+    xj = jnp.asarray(x)
+
+    def slave_proc(tid, _param):
+        lo, hi = partition_rows(x.shape[0], tid, pool.n_threads)
+        pts = xj[lo:hi]
+        for _ in range(iters):
+            pool.checkpoint_guard(tid)
+            centers = store.get("centers")
+            if use_kernel:
+                from repro.kernels.kmeans_assign.ops import kmeans_assign
+                a, _dist = kmeans_assign(pts, centers)
+            else:
+                a, _dist = _assign(pts, centers)
+            sums, counts = _partials(pts, a, k)
+            accu.accumulate(jnp.concatenate([sums.reshape(-1), counts]))
+            if tid == 0:  # one thread applies the center update (§4.5 pattern)
+                flat = store.get("partials")
+                sums_g = flat[: k * d].reshape(k, d)
+                counts_g = flat[k * d:]
+                store.set("centers", sums_g / jnp.maximum(counts_g[:, None], 1.0))
+            accu._barrier.wait()  # everyone sees the new centers next iter
+        return True
+
+    pool.create_threads(slave_proc)
+    pool.start_all()
+    pool.join_all()
+    return np.asarray(store.get("centers")), store, accu
+
+
+def fit_spmd(x, k: int, mesh, *, iters: int = 10, seed: int = 0,
+             mode: AccumMode | str = AccumMode.REDUCE_SCATTER):
+    from jax.sharding import PartitionSpec as P
+
+    rng = np.random.default_rng(seed)
+    init_centers = jnp.asarray(x[rng.choice(x.shape[0], k, replace=False)])
+    n_threads = mesh.shape["data"]
+    per = x.shape[0] // n_threads
+    xj = jnp.asarray(x[: per * n_threads])
+    d = x.shape[1]
+
+    def thread_proc(pts, centers0):
+        def body(centers, _):
+            a, _dist = _assign(pts, centers)
+            sums, counts = _partials(pts, a, k)
+            flat = accumulate(jnp.concatenate([sums.reshape(-1), counts]), "data", mode)
+            sums_g = flat[: k * d].reshape(k, d)
+            counts_g = flat[k * d:]
+            return sums_g / jnp.maximum(counts_g[:, None], 1.0), None
+
+        centers, _ = jax.lax.scan(body, centers0[0], None, length=iters)
+        return centers[None]
+
+    f = jax.jit(jax.shard_map(
+        thread_proc, mesh=mesh,
+        in_specs=(P("data", None), P(None, None, None)),
+        out_specs=P("data", None, None), check_vma=False))
+    reps = f(xj, init_centers[None])
+    return np.asarray(reps[0])

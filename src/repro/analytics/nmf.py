@@ -1,0 +1,124 @@
+"""NMF (paper §6.6): R ≈ P·Q with row-partitioned R/P and globally shared Q.
+
+Multiplicative updates (Lee–Seung).  With rows partitioned across threads,
+P's update is thread-local; Q's update needs two global reductions —
+numer = PᵀR (k×m) and gram = PᵀP (k×k) — which is precisely a
+DAddAccumulator workload (the paper keeps the factorized matrices in DSM).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate
+from repro.core.threads import DThreadPool
+from repro.data.pipeline import partition_rows
+
+_EPS = 1e-9
+
+
+@jax.jit
+def _update_p(p, q, r):
+    """P ← P ⊙ (RQᵀ) / (PQQᵀ)."""
+    return p * (r @ q.T) / (p @ (q @ q.T) + _EPS)
+
+
+@jax.jit
+def _q_partials(p, r):
+    return p.T @ r, p.T @ p            # numer (k,m), gram (k,k)
+
+
+def frob_loss(r, p, q) -> float:
+    return float(np.linalg.norm(np.asarray(r) - np.asarray(p) @ np.asarray(q)) ** 2 / r.shape[0])
+
+
+def fit_reference(r, k: int, iters: int = 10, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(np.abs(rng.normal(size=(r.shape[0], k))).astype(np.float32))
+    q = jnp.asarray(np.abs(rng.normal(size=(k, r.shape[1]))).astype(np.float32))
+    rj = jnp.asarray(r)
+    for _ in range(iters):
+        p = _update_p(p, q, rj)
+        numer, gram = _q_partials(p, rj)
+        q = q * numer / (gram @ q + _EPS)
+    return np.asarray(p), np.asarray(q)
+
+
+def fit_threads(r, k: int, *, n_nodes: int = 2, threads_per_node: int = 2,
+                iters: int = 10, seed: int = 0,
+                mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
+                store=None):
+    store = store or GlobalStore()
+    rng = np.random.default_rng(seed)
+    n, m = r.shape
+    # same init stream as fit_reference (P then Q) so trajectories match exactly
+    p_full0 = np.abs(rng.normal(size=(n, k))).astype(np.float32)
+    q0 = np.abs(rng.normal(size=(k, m))).astype(np.float32)
+    store.def_global("Q", jnp.asarray(q0))
+    store.new_array("q_partials", (k * m + k * k,))
+    pool = DThreadPool(n_nodes, threads_per_node)
+    accu = DAddAccumulator(store, "q_partials", pool.n_threads, n_nodes, mode)
+    rj = jnp.asarray(r)
+    results = {}
+
+    def slave_proc(tid, _param):
+        lo, hi = partition_rows(n, tid, pool.n_threads)
+        r_loc = rj[lo:hi]
+        p_loc = jnp.asarray(p_full0[lo:hi])
+        for _ in range(iters):
+            pool.checkpoint_guard(tid)
+            q = store.get("Q")
+            p_loc = _update_p(p_loc, q, r_loc)
+            numer, gram = _q_partials(p_loc, r_loc)
+            accu.accumulate(jnp.concatenate([numer.reshape(-1), gram.reshape(-1)]))
+            if tid == 0:
+                flat = store.get("q_partials")
+                numer_g = flat[: k * m].reshape(k, m)
+                gram_g = flat[k * m:].reshape(k, k)
+                store.set("Q", q * numer_g / (gram_g @ q + _EPS))
+            accu._barrier.wait()
+        results[tid] = p_loc
+        return p_loc
+
+    pool.create_threads(slave_proc)
+    pool.start_all()
+    pool.join_all()
+    p_full = np.concatenate([np.asarray(results[t]) for t in sorted(results)], axis=0)
+    return p_full, np.asarray(store.get("Q")), store, accu
+
+
+def fit_spmd(r, k: int, mesh, *, iters: int = 10, seed: int = 0,
+             mode: AccumMode | str = AccumMode.REDUCE_SCATTER):
+    from jax.sharding import PartitionSpec as P
+
+    rng = np.random.default_rng(seed)
+    n, m = r.shape
+    n_threads = mesh.shape["data"]
+    per = n // n_threads
+    rj = jnp.asarray(r[: per * n_threads])
+    # same init stream as fit_reference (P then Q)
+    p0 = jnp.asarray(np.abs(rng.normal(size=(n, k))).astype(np.float32)[: per * n_threads])
+    q0 = jnp.asarray(np.abs(rng.normal(size=(k, m))).astype(np.float32))
+
+    def thread_proc(r_loc, p_loc, q0r):
+        def body(carry, _):
+            p, q = carry
+            p = _update_p(p, q, r_loc)
+            numer, gram = _q_partials(p, r_loc)
+            flat = accumulate(jnp.concatenate([numer.reshape(-1), gram.reshape(-1)]),
+                              "data", mode)
+            numer_g = flat[: k * m].reshape(k, m)
+            gram_g = flat[k * m:].reshape(k, k)
+            return (p, q * numer_g / (gram_g @ q + _EPS)), None
+
+        (p, q), _ = jax.lax.scan(body, (p_loc, q0r[0]), None, length=iters)
+        return p, q[None]
+
+    f = jax.jit(jax.shard_map(
+        thread_proc, mesh=mesh,
+        in_specs=(P("data", None), P("data", None), P(None, None, None)),
+        out_specs=(P("data", None), P("data", None, None)), check_vma=False))
+    p, q = f(rj, p0, q0[None])
+    return np.asarray(p), np.asarray(q[0])

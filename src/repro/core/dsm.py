@@ -1,0 +1,238 @@
+"""Distributed shared memory (DSM) — STEP §4.1/§5.1 adapted to a JAX mesh.
+
+The paper keeps globally shared data in an in-memory key-value store; every
+thread in the cluster addresses it through a 64-bit ``object_id ++ field_id``
+address.  On a TPU pod the analogous substrate is a set of named, *sharded*
+``jax.Array``s living across the mesh: the NamedSharding plays the role the KV
+store's hash ring played, ICI collectives play the network.
+
+Three STEP concepts are kept first-class:
+
+* **shared variables / arrays / objects** — ``def_global`` / ``new_array`` /
+  ``new_object`` mirror ``DefGlobal`` / ``NewArray`` / ``NewObj``.  Objects are
+  pytrees of fields under one ``object_id``.
+* **fine- vs coarse-grained DSM** (§5.1) — a *layout policy*.  ``coarse`` packs
+  pytree leaves into 128-element-aligned flat *packages* (``pack_tree``), so a
+  collective over the packed buffer moves few large aligned blocks; ``fine``
+  leaves every leaf as its own transfer.  The paper's Fig. 3 ablation is
+  reproduced structurally in ``benchmarks/bench_dsm_modes.py``.
+* **host/device split** — between barriers the store owns the arrays (the KV
+  store's role); inside a jitted step, state is threaded functionally and the
+  store is only consulted for packing metadata.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.addressing import (
+    AddressAllocator,
+    FieldSlot,
+    GLOBALS_OBJECT_ID,
+    TPU_PACKAGE_ELEMS,
+    WORD_BYTES,
+    align_up,
+)
+
+
+@dataclass
+class GlobalEntry:
+    """One named piece of shared data plus its DSM directory record."""
+
+    name: str
+    slot: FieldSlot
+    sharding: Optional[NamedSharding]
+    value: Any  # jax.Array | ShapeDtypeStruct (abstract mode)
+    epoch: int = 0  # bumped on every Set — drives cache invalidation
+
+
+class GlobalStore:
+    """The DSM: a named global address space of (optionally sharded) arrays.
+
+    ``mesh=None`` gives a single-device store (the paper's single-node
+    degenerate case) used by unit tests and the analytics examples on CPU.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None, *, granularity: str = "coarse"):
+        if granularity not in ("coarse", "fine"):
+            raise ValueError(f"granularity must be coarse|fine, got {granularity}")
+        self.mesh = mesh
+        self.granularity = granularity
+        self._alloc = AddressAllocator(coarse=(granularity == "coarse"))
+        self._entries: Dict[str, GlobalEntry] = {}
+        # stats mirroring the paper's DSM throughput discussion
+        self.stats = {"get": 0, "set": 0, "bytes_get": 0, "bytes_set": 0, "transfers": 0}
+
+    # -- declaration ----------------------------------------------------------
+
+    def _sharding(self, spec: Optional[P]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec if spec is not None else P())
+
+    def _num_words(self, shape, dtype) -> int:
+        nbytes = int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype).itemsize if shape else jnp.dtype(dtype).itemsize
+        return max(1, (nbytes + WORD_BYTES - 1) // WORD_BYTES)
+
+    def def_global(self, name: str, value, *, spec: Optional[P] = None) -> str:
+        """``DefGlobal(NAME, TYPE)`` — declare a shared variable and set it."""
+        value = jnp.asarray(value)
+        slot = self._alloc.alloc_field(GLOBALS_OBJECT_ID, self._num_words(value.shape, value.dtype))
+        self._entries[name] = GlobalEntry(name, slot, self._sharding(spec), self._place(value, spec))
+        return name
+
+    def new_array(self, name: str, shape, dtype=jnp.float32, *, spec: Optional[P] = None) -> str:
+        """``NewArray<TYPE>(n)`` — allocate a zeroed shared array."""
+        oid = self._alloc.new_object()
+        slot = self._alloc.alloc_field(oid, self._num_words(shape, dtype))
+        value = jnp.zeros(shape, dtype)
+        self._entries[name] = GlobalEntry(name, slot, self._sharding(spec), self._place(value, spec))
+        return name
+
+    def new_object(self, name: str, fields: Dict[str, Any], *, specs: Optional[Dict[str, P]] = None) -> str:
+        """``NewObj`` — a shared object: a pytree of fields under one object_id."""
+        oid = self._alloc.new_object()
+        specs = specs or {}
+        placed = {}
+        words = 0
+        for fname, fval in fields.items():
+            fval = jnp.asarray(fval)
+            words += self._num_words(fval.shape, fval.dtype)
+            placed[fname] = self._place(fval, specs.get(fname))
+        slot = self._alloc.alloc_field(oid, words)
+        self._entries[name] = GlobalEntry(name, slot, None, placed)
+        return name
+
+    def delete(self, name: str) -> None:
+        """``DelArray`` / ``DelObj``."""
+        del self._entries[name]
+
+    # -- access (the DSM-internal-layer Get/Set of Table 1) -------------------
+
+    def _place(self, value, spec: Optional[P]):
+        if self.mesh is None:
+            return value
+        return jax.device_put(value, self._sharding(spec))
+
+    def get(self, name: str):
+        e = self._entries[name]
+        self.stats["get"] += 1
+        self.stats["bytes_get"] += _nbytes(e.value)
+        self.stats["transfers"] += self._transfer_count(e.value)
+        return e.value
+
+    def set(self, name: str, value, *, bump_epoch: bool = True) -> None:
+        e = self._entries[name]
+        if isinstance(e.value, dict):
+            e.value = {k: self._place(jnp.asarray(v), None) for k, v in value.items()}
+        else:
+            value = jnp.asarray(value)
+            if e.sharding is not None:
+                value = jax.device_put(value, e.sharding)
+            e.value = value
+        if bump_epoch:
+            e.epoch += 1
+        self.stats["set"] += 1
+        self.stats["bytes_set"] += _nbytes(e.value)
+        self.stats["transfers"] += self._transfer_count(e.value)
+
+    def mget(self, names) -> list:
+        """``MGet`` — batched get (one logical round trip)."""
+        vals = [self._entries[n].value for n in names]
+        self.stats["get"] += 1
+        self.stats["transfers"] += 1
+        for v in vals:
+            self.stats["bytes_get"] += _nbytes(v)
+        return vals
+
+    def inc(self, name: str, amount=1):
+        """Atomic increment (Table 1) — skips the cache layer by contract."""
+        e = self._entries[name]
+        e.value = jnp.asarray(e.value) + amount
+        e.epoch += 1
+        return e.value
+
+    def epoch(self, name: str) -> int:
+        return self._entries[name].epoch
+
+    def address(self, name: str) -> int:
+        return self._entries[name].slot.address
+
+    def names(self):
+        return list(self._entries)
+
+    def _transfer_count(self, value) -> int:
+        """How many physical transfers a get/set of `value` costs under the
+        current granularity — the quantity Fig. 3 is about."""
+        leaves = jax.tree.leaves(value)
+        if self.granularity == "coarse":
+            return len(leaves)  # one package-aligned bulk transfer per leaf
+        # fine-grained: one word-sized KV op per word
+        return int(sum(max(1, _nbytes(l) // WORD_BYTES) for l in leaves))
+
+
+def _nbytes(v) -> int:
+    return int(sum(l.size * jnp.dtype(l.dtype).itemsize for l in jax.tree.leaves(v)))
+
+
+# ---------------------------------------------------------------------------
+# Coarse-grained packing: fuse a pytree into package-aligned flat buffers.
+# This is the TPU realisation of the paper's 32-word packages: collectives over
+# the packed representation move one large lane-aligned block instead of one
+# (latency-bound) transfer per leaf.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PackSpec:
+    """Metadata to unpack a fused buffer back into the original pytree."""
+
+    treedef: Any
+    shapes: list
+    dtypes: list
+    offsets: list  # start offset of each leaf in the packed buffer (elements)
+    sizes: list    # padded size of each leaf (elements)
+    total: int
+
+    @property
+    def padding_waste(self) -> int:
+        return self.total - sum(int(np.prod(s, dtype=np.int64)) for s in self.shapes)
+
+
+def pack_spec(tree, *, package: int = TPU_PACKAGE_ELEMS, dtype=jnp.float32) -> PackSpec:
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes, dtypes, offsets, sizes = [], [], [], []
+    off = 0
+    for l in leaves:
+        shapes.append(tuple(l.shape))
+        dtypes.append(jnp.dtype(l.dtype))
+        size = align_up(max(1, int(np.prod(l.shape, dtype=np.int64))), package)
+        offsets.append(off)
+        sizes.append(size)
+        off += size
+    return PackSpec(treedef, shapes, dtypes, offsets, sizes, off)
+
+
+def pack_tree(tree, spec: PackSpec, *, dtype=jnp.float32):
+    """Fuse all leaves into one package-aligned flat buffer (coarse DSM)."""
+    leaves = jax.tree.leaves(tree)
+    parts = []
+    for l, size in zip(leaves, spec.sizes):
+        flat = jnp.ravel(l).astype(dtype)
+        parts.append(jnp.pad(flat, (0, size - flat.size)))
+    return jnp.concatenate(parts) if parts else jnp.zeros((0,), dtype)
+
+
+def unpack_tree(buf, spec: PackSpec):
+    """Inverse of :func:`pack_tree`."""
+    leaves = []
+    for shape, dt, off, size in zip(spec.shapes, spec.dtypes, spec.offsets, spec.sizes):
+        n = int(np.prod(shape, dtype=np.int64))
+        leaves.append(jax.lax.dynamic_slice_in_dim(buf, off, n).astype(dt).reshape(shape))
+    return jax.tree.unflatten(spec.treedef, leaves)

@@ -1,0 +1,60 @@
+"""Sparse vector representation for the accumulator's sparse/auto modes (§5.2).
+
+The paper represents a sparse vector as (index, non-zero element) pairs and
+transfers those when ``2 * nnz < V``.  On TPU we keep the same decision rule
+but produce the pairs with a (blocked) top-k so shapes stay static under jit:
+``k`` is the static per-device budget; when ``nnz <= k`` the representation is
+lossless, which is exactly when the auto mode may select it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_sparsify(x: jax.Array, k: int):
+    """Return (indices, values) of the k largest-magnitude entries of a 1-D x."""
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    return idx, x[idx]
+
+
+def blocked_topk_sparsify(x: jax.Array, k: int, block: int = 1024):
+    """Per-block top-k — the TPU-friendly variant mirrored by
+    :mod:`repro.kernels.topk_compress`.  Selects ceil(k/nblocks) per block so
+    selection parallelises over lanes without a global sort.
+    """
+    n = x.shape[0]
+    nblocks = max(1, (n + block - 1) // block)
+    per_block = max(1, (k + nblocks - 1) // nblocks)
+    pad = nblocks * block - n
+    xp = jnp.pad(x, (0, pad)).reshape(nblocks, block)
+    _, idx = jax.lax.top_k(jnp.abs(xp), per_block)          # (nblocks, per_block)
+    base = (jnp.arange(nblocks) * block)[:, None]
+    flat_idx = (idx + base).reshape(-1)
+    vals = jnp.take_along_axis(xp, idx, axis=1).reshape(-1)
+    # clamp padded positions to index 0 with value 0 (harmless scatter-add)
+    valid = flat_idx < n
+    return jnp.where(valid, flat_idx, 0), jnp.where(valid, vals, 0.0)
+
+
+def densify(idx: jax.Array, vals: jax.Array, n: int) -> jax.Array:
+    """Scatter-add (index, value) pairs into a dense length-n vector."""
+    return jnp.zeros((n,), vals.dtype).at[idx.reshape(-1)].add(vals.reshape(-1))
+
+
+def nnz(x: jax.Array) -> jax.Array:
+    return jnp.sum((x != 0).astype(jnp.int32))
+
+
+def sparse_beneficial(x: jax.Array, k: int, block: int = 1024) -> jax.Array:
+    """Paper's auto rule, blocked-selection aware: pairs win when the blocked
+    top-k is lossless (every block's nnz fits its per-block quota) and the
+    pairs are smaller than the dense vector (2k < V)."""
+    n = x.shape[0]
+    nblocks = max(1, (n + block - 1) // block)
+    per_block = max(1, (k + nblocks - 1) // nblocks)
+    pad = nblocks * block - n
+    xp = jnp.pad(x, (0, pad)).reshape(nblocks, block)
+    per_block_nnz = jnp.sum((xp != 0).astype(jnp.int32), axis=1)
+    return jnp.logical_and(jnp.all(per_block_nnz <= per_block), 2 * k < n)

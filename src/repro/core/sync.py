@@ -1,0 +1,133 @@
+"""Distributed thread synchronization — STEP §4.3/§5.3 (+ SSP for async).
+
+The paper's master runs a *sync controller*: barriers are counters that
+broadcast "release" when full; semaphores are counters with a FIFO wait queue.
+Those semantics are reproduced exactly for the host-side thread pool (the
+Pthreads-style programming model).  On the SPMD path a barrier is implicit in
+every collective — `sync controller == the collective schedule` — so the SPMD
+adapter simply documents the correspondence.
+
+``SSPClock`` adds the bounded-staleness coordination STEP cites from Petuum:
+workers may run up to `staleness` iterations ahead of the slowest worker —
+this is the straggler-mitigation knob for the training path.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, Optional
+
+
+class DBarrier:
+    """Counter-based barrier with the paper's ``Enter(timeout)`` API."""
+
+    def __init__(self, count: int):
+        self.count = count
+        self._cond = threading.Condition()
+        self._arrived = 0
+        self._generation = 0
+        self.entries = 0  # stats: total Enter calls observed by the controller
+
+    def enter(self, timeout: Optional[float] = None) -> bool:
+        with self._cond:
+            gen = self._generation
+            self._arrived += 1
+            self.entries += 1
+            if self._arrived == self.count:
+                # last arrival: "release" broadcast
+                self._arrived = 0
+                self._generation += 1
+                self._cond.notify_all()
+                return True
+            t = None if (timeout is None or timeout < 0) else timeout
+            while gen == self._generation:
+                if not self._cond.wait(timeout=t):
+                    return False
+            return True
+
+    # paper-cased alias (Enter(int timeout=-1))
+    def Enter(self, timeout: float = -1) -> bool:
+        return self.enter(None if timeout is None or timeout < 0 else timeout)
+
+
+class DSemaphore:
+    """Counting semaphore with FIFO wakeup, as specified in §5.3."""
+
+    def __init__(self, count: int):
+        if count < 0:
+            raise ValueError("semaphore count must be non-negative")
+        self._count = count
+        self._cond = threading.Condition()
+        self._queue: deque[int] = deque()
+        self._ticket = 0
+
+    def acquire(self, timeout: Optional[float] = None) -> bool:
+        with self._cond:
+            ticket = self._ticket
+            self._ticket += 1
+            self._queue.append(ticket)
+            t = None if (timeout is None or timeout < 0) else timeout
+            while not (self._count > 0 and self._queue[0] == ticket):
+                if not self._cond.wait(timeout=t):
+                    self._queue.remove(ticket)
+                    return False
+            self._queue.popleft()
+            self._count -= 1
+            self._cond.notify_all()
+            return True
+
+    def release(self) -> None:
+        with self._cond:
+            self._count += 1
+            self._cond.notify_all()
+
+    # paper-cased aliases
+    def Acquire(self, timeout: float = -1) -> bool:
+        return self.acquire(None if timeout is None or timeout < 0 else timeout)
+
+    Release = release
+
+
+class SSPClock:
+    """Stale Synchronous Parallel clock (Petuum-style, cited by the paper).
+
+    ``tick(tid)`` advances a worker's clock; ``wait(tid)`` blocks while the
+    worker is more than ``staleness`` ticks ahead of the slowest worker.
+    ``staleness=0`` degenerates to a barrier (fully synchronous).
+    """
+
+    def __init__(self, n_workers: int, staleness: int = 0):
+        self.staleness = staleness
+        self._clocks: Dict[int, int] = {i: 0 for i in range(n_workers)}
+        self._cond = threading.Condition()
+        self.block_events = 0
+
+    def tick(self, tid: int) -> int:
+        with self._cond:
+            self._clocks[tid] += 1
+            self._cond.notify_all()
+            return self._clocks[tid]
+
+    def wait(self, tid: int, timeout: Optional[float] = None) -> bool:
+        with self._cond:
+            while self._clocks[tid] - min(self._clocks.values()) > self.staleness:
+                self.block_events += 1
+                if not self._cond.wait(timeout=timeout):
+                    return False
+            return True
+
+    def min_clock(self) -> int:
+        with self._cond:
+            return min(self._clocks.values())
+
+    def drop_worker(self, tid: int) -> None:
+        """Remove a failed worker so survivors are not blocked forever (FT)."""
+        with self._cond:
+            self._clocks.pop(tid, None)
+            self._cond.notify_all()
+
+    def add_worker(self, tid: int, clock: Optional[int] = None) -> None:
+        with self._cond:
+            self._clocks[tid] = self.min_clock() if clock is None else clock
+            self._cond.notify_all()

@@ -1,0 +1,17 @@
+from repro.ft.checkpoint import (
+    AsyncCheckpointer,
+    Checkpoint,
+    latest_step,
+    list_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.ft.elastic import RecoveryPlan, elastic_restore, plan_recovery, rebalance_batch, reshard_tree
+from repro.ft.heartbeat import HeartbeatMonitor
+
+__all__ = [
+    "AsyncCheckpointer", "Checkpoint", "latest_step", "list_checkpoints",
+    "restore_checkpoint", "save_checkpoint",
+    "RecoveryPlan", "elastic_restore", "plan_recovery", "rebalance_batch", "reshard_tree",
+    "HeartbeatMonitor",
+]

@@ -1,0 +1,164 @@
+"""Checkpoint-based recovery — STEP §5.4.
+
+The paper checkpoints a consistent copy of DSM every few iterations, right
+before barrier release, to a fault-tolerant FS; recovery rolls every thread
+back to the latest checkpoint.  Here:
+
+* ``save_checkpoint`` persists any pytree (params / optimizer state / DSM
+  GlobalStore contents / data-pipeline step) to a directory of ``.npy`` leaves
+  plus a JSON manifest — sharded ``jax.Array``s are gathered to host first.
+  Saves are atomic (write to ``.tmp`` then rename) and optionally **async**
+  (background thread) so the training loop is not blocked — the paper's
+  barrier-adjacent checkpoint with the write overlapped.
+* ``restore_checkpoint`` loads the newest (or a specific) step; the mesh/
+  sharding to restore *onto* is supplied by the caller, which is what makes
+  multi-node recovery and elastic rescale work (ft/elastic.py).
+* :class:`Checkpoint` is the paper's user hook (``DoCheckpoint``/``DoRestart``)
+  for program-specific state.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.utils.tree import tree_flatten_with_paths
+
+
+_MANIFEST = "manifest.json"
+
+
+def _ckpt_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def save_checkpoint(root: str, step: int, tree: Any, *, extra: Optional[Dict] = None,
+                    keep: int = 3) -> str:
+    """Atomically persist `tree` for `step`; prune to the newest `keep` ckpts."""
+    os.makedirs(root, exist_ok=True)
+    final = _ckpt_dir(root, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "time": time.time(), "leaves": [], "extra": extra or {}}
+    for i, (path, leaf) in enumerate(tree_flatten_with_paths(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({"path": path, "file": fname,
+                                   "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _prune(root, keep)
+    return final
+
+
+def _prune(root: str, keep: int) -> None:
+    steps = sorted(list_checkpoints(root))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(_ckpt_dir(root, s), ignore_errors=True)
+
+
+def list_checkpoints(root: str):
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for d in os.listdir(root):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, d, _MANIFEST)):
+                out.append(int(d.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = list_checkpoints(root)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(root: str, template: Any, *, step: Optional[int] = None,
+                       shardings: Any = None):
+    """Restore into the structure of `template` (pytree of arrays or SDS).
+
+    ``shardings`` — optional pytree (or single sharding) to place leaves onto:
+    this is the knob multi-node/elastic recovery turns (restore onto the
+    *surviving* mesh).  Returns (tree, manifest_extra, step).
+    """
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = _ckpt_dir(root, step)
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    by_path = {rec["path"]: rec for rec in manifest["leaves"]}
+
+    flat = tree_flatten_with_paths(template)
+    leaves = []
+    for path, tmpl in flat:
+        rec = by_path.get(path)
+        if rec is None:
+            raise KeyError(f"checkpoint {d} missing leaf {path}")
+        arr = np.load(os.path.join(d, rec["file"]))
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{path}: ckpt shape {arr.shape} != template {tmpl.shape}")
+        leaves.append(arr.astype(tmpl.dtype))
+
+    treedef = jax.tree.structure(template)
+    tree = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        if jax.tree.structure(shardings, is_leaf=lambda x: x is None) != treedef:
+            tree = jax.tree.map(lambda x: jax.device_put(x, shardings), tree)
+        else:
+            tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, manifest.get("extra", {}), step
+
+
+class AsyncCheckpointer:
+    """Non-blocking saver: snapshot to host, write on a background thread."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        self.wait()  # one in flight at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save_checkpoint(self.root, step, host_tree, extra=extra, keep=self.keep)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+class Checkpoint:
+    """Paper §5.4 user hook: extend and override to persist extra program state."""
+
+    def do_checkpoint(self) -> Dict:
+        return {}
+
+    def do_restart(self, state: Dict) -> None:
+        pass
+
+    # paper-cased aliases
+    DoCheckpoint = do_checkpoint
+    DoRestart = do_restart

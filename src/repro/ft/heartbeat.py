@@ -1,0 +1,88 @@
+"""Heartbeat failure detection — STEP §5.4.
+
+Every slave sends heartbeats to the master; a slave silent for longer than the
+timeout is declared dead and recovery starts.  This is a host-side control
+plane and ports unchanged: workers (threads here, hosts on a real pod) beat a
+monitor; the monitor invokes an ``on_failure`` callback with the dead node ids.
+A ``virtual_barrier`` pause (the paper's "checkpoint" command for async tasks)
+is exposed as ``pause``/``resume`` events the workers poll.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Set
+
+
+class HeartbeatMonitor:
+    def __init__(self, node_ids: List[int], timeout: float = 0.5,
+                 check_interval: float = 0.05,
+                 on_failure: Optional[Callable[[List[int]], None]] = None):
+        self.timeout = timeout
+        self.check_interval = check_interval
+        self.on_failure = on_failure
+        self._last: Dict[int, float] = {n: time.monotonic() for n in node_ids}
+        self._dead: Set[int] = set()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._pause = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- slave side ------------------------------------------------------------
+
+    def beat(self, node_id: int) -> None:
+        with self._lock:
+            if node_id not in self._dead:
+                self._last[node_id] = time.monotonic()
+
+    def should_pause(self) -> bool:
+        """Workers poll this at barrier boundaries (virtual-barrier checkpoint)."""
+        return self._pause.is_set()
+
+    # -- master side -------------------------------------------------------------
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            now = time.monotonic()
+            newly_dead = []
+            with self._lock:
+                for n, t in self._last.items():
+                    if n not in self._dead and now - t > self.timeout:
+                        self._dead.add(n)
+                        newly_dead.append(n)
+            if newly_dead and self.on_failure is not None:
+                self.on_failure(newly_dead)
+            time.sleep(self.check_interval)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2)
+
+    def pause(self) -> None:
+        """Broadcast the paper's 'checkpoint' command (enforce a virtual barrier)."""
+        self._pause.set()
+
+    def resume(self) -> None:
+        self._pause.clear()
+
+    def dead_nodes(self) -> List[int]:
+        with self._lock:
+            return sorted(self._dead)
+
+    def declare_dead(self, node_id: int) -> None:
+        """Test/drill hook: fail a node immediately."""
+        with self._lock:
+            self._dead.add(node_id)
+        if self.on_failure is not None:
+            self.on_failure([node_id])
+
+    def revive(self, node_id: int) -> None:
+        with self._lock:
+            self._dead.discard(node_id)
+            self._last[node_id] = time.monotonic()

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots (each: kernel.py + ops.py + ref.py).
+
+flash_attention — online-softmax attention, VMEM accumulator over KV tiles
+accumulate      — the DAddAccumulator's blocked local combine (STEP §5.2)
+topk_compress   — blocked top-k pairs (accumulator sparse mode)
+sparse_update   — scatter-add of pairs via one-hot MXU GEMM (receive side)
+kmeans_assign   — nearest-center assignment via distance GEMM (paper §6.5)
+ssd_scan        — Mamba2 SSD: chunk GEMMs + VMEM-carried recurrent state
+
+All validated on CPU with interpret=True against the ref.py oracles; compiled
+(Mosaic) lowering engages on a real TPU backend.
+"""

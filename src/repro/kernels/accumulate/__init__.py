@@ -1,0 +1,1 @@
+from repro.kernels.accumulate import kernel, ops, ref

@@ -1,0 +1,35 @@
+"""Blocked N-vector accumulation kernel — the DAddAccumulator's local combine.
+
+STEP §5.2: a node receiving its chunk from N threads reduces the N
+sub-vectors in local memory.  On TPU the chunk lives in HBM as an (N, V)
+block; this kernel streams 128-lane-aligned (N, block_v) tiles through VMEM
+and reduces in fp32 — one pass, fully bandwidth-bound, which is the roofline
+for a reduction.  Grid = (V / block_v,).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _accum_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...].astype(jnp.float32), axis=0).astype(o_ref.dtype)
+
+
+def accumulate_blocked(x, *, block_v: int = 1024, interpret: bool = False):
+    """x (N, V) → (V,): column sum, tiled over V."""
+    n, v = x.shape
+    block_v = min(block_v, v)
+    grid = (pl.cdiv(v, block_v),)
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, block_v), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((block_v,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((v,), x.dtype),
+        interpret=interpret,
+    )(x)

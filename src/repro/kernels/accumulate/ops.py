@@ -1,0 +1,14 @@
+"""Jit'd wrapper for the blocked accumulator kernel."""
+
+from functools import partial
+
+import jax
+
+from repro.kernels.accumulate.kernel import accumulate_blocked
+
+
+@partial(jax.jit, static_argnames=("block_v", "interpret"))
+def accumulate(x, *, block_v: int = 1024, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return accumulate_blocked(x, block_v=block_v, interpret=interpret)

@@ -1,0 +1,8 @@
+"""Oracle for the blocked accumulator."""
+
+import jax.numpy as jnp
+
+
+def accumulate_ref(x):
+    """x (N, V) → (V,)."""
+    return jnp.sum(x.astype(jnp.float32), axis=0).astype(x.dtype)

@@ -1,0 +1,103 @@
+"""Flash attention Pallas TPU kernel: online-softmax over KV tiles in VMEM.
+
+Grid = (batch×heads, q_blocks, kv_blocks); the kv axis is the minor-most grid
+dimension, which TPU executes sequentially per (bh, iq) — the running max /
+denominator / accumulator therefore live in VMEM scratch across kv steps and
+q/k/v tiles stream HBM→VMEM exactly once.  MXU work is the two tile GEMMs
+(q·kᵀ and p·v); tile shapes should be multiples of (8, 128) for bf16.
+
+Adaptation note (DESIGN.md): this is the standard TPU flash schedule — the
+VMEM-resident accumulator replaces the GPU kernel's shared-memory tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  seq_q: int, seq_k: int, q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                    # (bk, dv)
+    # zero the OOB tail of the last KV tile: p is 0 there but 0·garbage = NaN
+    kvalid = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0) < seq_k
+    v = jnp.where(kvalid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    qpos = q_offset + iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask = jnp.logical_and(mask, qpos >= kpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False):
+    """q (BH, T, d), k (BH, S, d), v (BH, S, dv) → (BH, T, dv)."""
+    BH, T, d = q.shape
+    S = k.shape[1]
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, T)
+    block_k = min(block_k, S)
+    nq = pl.cdiv(T, block_q)
+    nk = pl.cdiv(S, block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, seq_q=T, seq_k=S, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda bh, iq, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

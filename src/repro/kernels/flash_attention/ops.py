@@ -1,0 +1,35 @@
+"""Jit'd wrapper adapting model layout (B,T,KH,G,d) to the kernel layout."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128, interpret=None):
+    """q (B,T,KH,G,d); k (B,S,KH,d); v (B,S,KH,dv) → (B,T,KH,G,dv).
+
+    GQA is handled by fusing (KH, G) into the kernel's batch×heads axis and
+    broadcasting K/V over G (zero-copy along the new axis).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, T, KH, G, d = q.shape
+    S = k.shape[1]
+    dv = v.shape[-1]
+    qb = q.transpose(0, 2, 3, 1, 4).reshape(B * KH * G, T, d)
+    kb = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None], (B, KH, G, S, d)).reshape(B * KH * G, S, d)
+    vb = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None], (B, KH, G, S, dv)).reshape(B * KH * G, S, dv)
+    out = flash_attention_bhsd(qb, kb, vb, causal=causal, q_offset=q_offset,
+                               block_q=block_q, block_k=block_k, interpret=interpret)
+    return out.reshape(B, KH, G, T, dv).transpose(0, 3, 1, 2, 4)

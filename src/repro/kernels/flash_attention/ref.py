@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_bhsd_ref(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """q (BH, T, d), k (BH, S, d), v (BH, S, dv) → (BH, T, dv)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        T, S = q.shape[1], k.shape[1]
+        tpos = q_offset + jnp.arange(T)
+        mask = tpos[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.kmeans_assign import kernel, ops, ref

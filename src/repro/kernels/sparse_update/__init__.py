@@ -1,0 +1,1 @@
+from repro.kernels.sparse_update import kernel, ops, ref

@@ -1,0 +1,55 @@
+"""Sparse scatter-add: densify (index, value) pairs into an output vector.
+
+The receive side of the accumulator's sparse mode (STEP §5.2): a node holding
+chunk *i* adds incoming pairs into its shared-array chunk.  TPUs have no
+efficient random scatter into VMEM, so the TPU-native schedule inverts the
+loop: grid over OUTPUT blocks; each block builds a one-hot (M, block_v)
+dispatch of the pairs that land in its range and reduces it with a single
+(1, M) × (M, block_v) GEMM — scatter as MXU matmul (DESIGN.md: this replaces
+the GPU atomic-add formulation, which has no TPU analogue).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scatter_kernel(idx_ref, val_ref, o_ref, *, block_v: int):
+    j = pl.program_id(0)
+    idx = idx_ref[...]                                     # (M,)
+    val = val_ref[...].astype(jnp.float32)                 # (M,)
+    base = j * block_v
+    local = idx - base
+    inside = jnp.logical_and(local >= 0, local < block_v)
+    m = idx.shape[0]
+    # one-hot dispatch (M, block_v), masked to this block
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, block_v), 1)
+    onehot = jnp.where(
+        jnp.logical_and(inside[:, None], cols == jnp.clip(local, 0, block_v - 1)[:, None]),
+        1.0, 0.0)
+    o_ref[...] = jax.lax.dot_general(
+        val[None, :], onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0].astype(o_ref.dtype)
+
+
+def sparse_scatter_add(idx, vals, out_len: int, *, block_v: int = 1024,
+                       interpret: bool = False):
+    """(idx (M,), vals (M,)) → dense (out_len,) with duplicate indices summed."""
+    block_v = min(block_v, out_len)
+    grid = (pl.cdiv(out_len, block_v),)
+    kernel = functools.partial(_scatter_kernel, block_v=block_v)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(idx.shape, lambda j: (0,)),
+            pl.BlockSpec(vals.shape, lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_v,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((out_len,), vals.dtype),
+        interpret=interpret,
+    )(idx, vals)

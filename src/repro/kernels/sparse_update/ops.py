@@ -1,0 +1,14 @@
+"""Jit'd wrapper for the scatter-add kernel."""
+
+from functools import partial
+
+import jax
+
+from repro.kernels.sparse_update.kernel import sparse_scatter_add
+
+
+@partial(jax.jit, static_argnames=("out_len", "block_v", "interpret"))
+def scatter_add(idx, vals, *, out_len: int, block_v: int = 1024, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return sparse_scatter_add(idx, vals, out_len, block_v=block_v, interpret=interpret)

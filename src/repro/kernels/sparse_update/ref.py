@@ -1,0 +1,7 @@
+"""Oracle: jnp scatter-add densify."""
+
+import jax.numpy as jnp
+
+
+def sparse_scatter_add_ref(idx, vals, out_len: int):
+    return jnp.zeros((out_len,), vals.dtype).at[idx].add(vals)

@@ -1,0 +1,82 @@
+"""Mamba2 SSD Pallas kernel: chunk GEMMs on the MXU, state carried in VMEM.
+
+Grid = (batch×heads, n_chunks); the chunk axis is minor-most, so TPU executes
+chunks sequentially per (b,h) and the (N, P) recurrent state lives in VMEM
+scratch across chunk steps — the inter-chunk linear recurrence costs no HBM
+round-trip.  Within a chunk everything is (Q×N)/(Q×Q)/(N×P) GEMMs.
+
+This is the TPU adaptation of the GPU SSD scan (DESIGN.md): the GPU version
+leans on warp-level scans; the TPU version restructures the recurrence so the
+sequential part is one VMEM-resident state update per chunk and all O(T·Q)
+work is systolic matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, s_scr, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)     # (Q, P)
+    a = a_ref[0].astype(jnp.float32)     # (Q,)
+    bm = b_ref[0].astype(jnp.float32)    # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)    # (Q, N)
+
+    cum = jnp.cumsum(a)                  # (Q,) log-decay prefix, ≤ 0
+    # off-chunk: contribution of the carried state
+    y_off = jax.lax.dot_general(cm * jnp.exp(cum)[:, None], s_scr[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)      # (Q, P)
+    # intra-chunk quadratic, masked decay before exp (upper triangle overflows)
+    li = cum[:, None]
+    lj = cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where(mask, li - lj, -jnp.inf))
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * decay
+    y_diag = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: S ← S·exp(Σa) + Σ_j exp(Σa − cum_j)·B_j ⊗ x_j
+    total = jnp.exp(cum[chunk - 1])
+    sdecay = jnp.exp(cum[chunk - 1] - cum)                   # (Q,)
+    s_new = s_scr[...] * total + jax.lax.dot_general(
+        bm * sdecay[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (N, P)
+    s_scr[...] = s_new
+
+
+def ssd_scan_bh(x, a, bm, cm, *, chunk: int, interpret: bool = False):
+    """x (BH, T, P), a (BH, T), bm/cm (BH, T, N) → y (BH, T, P).  T % chunk == 0."""
+    BH, T, P = x.shape
+    N = bm.shape[-1]
+    assert T % chunk == 0, f"T={T} must divide chunk={chunk}"
+    nc = T // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, c: (bh, c)),
+            pl.BlockSpec((1, chunk, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, c: (bh, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, c: (bh, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, a, bm, cm)

@@ -1,0 +1,34 @@
+"""Jit'd wrapper: model layout (b,T,H,P) → kernel layout (BH,T,·)."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_bh
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A_log, B, C, *, chunk: int = 128, interpret=None):
+    """Same contract as models.mamba.ssd_chunked: returns (y, final_state=None).
+
+    x (b,T,H,P), dt (b,T,H), A_log (H,), B/C (b,T,G,N).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    a = (dt * (-jnp.exp(A_log))[None, None, :]).astype(jnp.float32)
+    xbar = (x * dt[..., None].astype(x.dtype))
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def to_bh(t):  # (b,T,H,·) → (bH,T,·)
+        perm = (0, 2, 1) + tuple(range(3, t.ndim))
+        return t.transpose(perm).reshape((b * H, T) + t.shape[3:])
+
+    y = ssd_scan_bh(to_bh(xbar), to_bh(a), to_bh(Bh), to_bh(Ch),
+                    chunk=chunk, interpret=interpret)
+    y = y.reshape(b, H, T, P).transpose(0, 2, 1, 3)
+    return y, None

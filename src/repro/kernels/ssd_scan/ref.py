@@ -1,0 +1,36 @@
+"""Oracle: the pure-jnp chunked SSD from models/mamba.py, plus a fully
+sequential recurrence for cross-checking both."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba import ssd_chunked  # the chunked reference
+
+
+def ssd_sequential_ref(x, dt, A_log, B, C):
+    """Token-by-token recurrence (the SSM definition).  Slow; small tests only.
+
+    x (b,T,H,P), dt (b,T,H), A_log (H,), B/C (b,T,G,N) → y (b,T,H,P)
+    """
+    b, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    a = jnp.exp(dt * (-jnp.exp(A_log))[None, None, :])        # (b,T,H)
+    xbar = x * dt[..., None]
+
+    def step(s, inp):
+        a_t, x_t, b_t, c_t = inp                               # (b,H)/(b,H,P)/(b,H,N)/(b,H,N)
+        s = s * a_t[..., None, None] + jnp.einsum("bhn,bhp->bhnp", b_t, x_t)
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, s)
+        return s, y
+
+    s0 = jnp.zeros((b, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, s0,
+        (a.transpose(1, 0, 2).astype(jnp.float32),
+         xbar.transpose(1, 0, 2, 3).astype(jnp.float32),
+         Bh.transpose(1, 0, 2, 3).astype(jnp.float32),
+         Ch.transpose(1, 0, 2, 3).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.topk_compress import kernel, ops, ref

@@ -1,0 +1,61 @@
+"""Per-block top-k magnitude compression — the accumulator's sparse mode.
+
+STEP §5.2 ships sparse vectors as (index, value) pairs.  For gradients the
+production form is blocked top-k: each 128-lane-aligned block contributes its
+``k_per_block`` largest-|x| entries, so selection is lane-parallel with no
+global sort (the same schedule :func:`repro.core.sparse.blocked_topk_sparsify`
+implements in jnp — that is the oracle).
+
+Grid = (V / block_v,).  Selection is k iterations of (max → record → mask),
+k is small (k ≤ 64 per block in practice); everything stays in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(x_ref, idx_ref, val_ref, *, k: int, block_v: int, total: int):
+    j = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                       # (block_v,)
+    base = j * block_v
+    pos = base + jax.lax.iota(jnp.int32, block_v)
+    valid = pos < total
+    mag = jnp.where(valid, jnp.abs(x), -1.0)
+
+    def body(i, carry):
+        mag_c, = carry
+        am = jnp.argmax(mag_c)
+        idx_ref[i] = (base + am).astype(jnp.int32)
+        val_ref[i] = jnp.where(mag_c[am] >= 0, x[am], 0.0).astype(val_ref.dtype)
+        return (mag_c.at[am].set(-2.0),)
+
+    jax.lax.fori_loop(0, k, body, (mag,))
+
+
+def topk_compress_blocked(x, *, k_per_block: int, block_v: int = 1024,
+                          interpret: bool = False):
+    """x (V,) → (idx (nblocks*k,), vals (nblocks*k,)) — blocked top-k pairs."""
+    v = x.shape[0]
+    block_v = min(block_v, v)
+    nblocks = pl.cdiv(v, block_v)
+    kernel = functools.partial(_topk_kernel, k=k_per_block, block_v=block_v, total=v)
+    idx, vals = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((block_v,), lambda j: (j,))],
+        out_specs=[
+            pl.BlockSpec((k_per_block,), lambda j: (j,)),
+            pl.BlockSpec((k_per_block,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks * k_per_block,), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks * k_per_block,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x)
+    return idx, vals

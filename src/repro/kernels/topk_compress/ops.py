@@ -1,0 +1,15 @@
+"""Jit'd wrapper for blocked top-k compression."""
+
+from functools import partial
+
+import jax
+
+from repro.kernels.topk_compress.kernel import topk_compress_blocked
+
+
+@partial(jax.jit, static_argnames=("k_per_block", "block_v", "interpret"))
+def topk_compress(x, *, k_per_block: int, block_v: int = 1024, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return topk_compress_blocked(x, k_per_block=k_per_block, block_v=block_v,
+                                 interpret=interpret)

@@ -1,0 +1,19 @@
+"""Oracle: per-block top-k pairs (order-insensitive within a block)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress_ref(x, *, k_per_block: int, block_v: int = 1024):
+    v = x.shape[0]
+    nblocks = (v + block_v - 1) // block_v
+    pad = nblocks * block_v - v
+    xp = jnp.pad(x, (0, pad)).reshape(nblocks, block_v)
+    valid = (jnp.arange(nblocks * block_v).reshape(nblocks, block_v)) < v
+    mag = jnp.where(valid, jnp.abs(xp), -1.0)
+    _, idx = jax.lax.top_k(mag, k_per_block)                 # (nblocks, k)
+    base = (jnp.arange(nblocks) * block_v)[:, None]
+    flat_idx = (idx + base).reshape(-1)
+    vals = jnp.take_along_axis(xp, idx, axis=1).reshape(-1)
+    ok = jnp.take_along_axis(mag, idx, axis=1).reshape(-1) >= 0
+    return flat_idx.astype(jnp.int32), jnp.where(ok, vals, 0.0)

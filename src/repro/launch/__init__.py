@@ -1,0 +1,21 @@
+"""Launch layer: meshes, sharding rules, step builders, dry-run, roofline, drivers.
+
+NOTE: do not import repro.launch.dryrun from here — it mutates XLA_FLAGS at
+import time and must only ever run as its own process.
+"""
+
+from repro.launch.mesh import (
+    HBM_BW,
+    HBM_BYTES,
+    ICI_LINK_BW,
+    PEAK_FLOPS_BF16,
+    data_axes,
+    dp_degree,
+    make_host_mesh,
+    make_production_mesh,
+)
+
+__all__ = [
+    "HBM_BW", "HBM_BYTES", "ICI_LINK_BW", "PEAK_FLOPS_BF16",
+    "data_axes", "dp_degree", "make_host_mesh", "make_production_mesh",
+]

@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent, no hardware.
+
+For one (arch × shape × mesh) cell:
+    jax.jit(step, in_shardings=…, out_shardings=…).lower(**input_specs)
+    .compile()  → memory_analysis() + cost_analysis() + collective schedule
+
+Run one cell per process (device state + compile caches stay isolated):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k --mesh single --out experiments/dryrun
+
+The first two lines of this file force 512 host devices BEFORE any jax import
+— do not move them.
+
+Scan-body correction: XLA cost analysis counts a lax.scan/while body ONCE, not
+× trip count.  Each single-pod cell therefore also compiles 2–3 reduced-layer
+*probes* and linearly extrapolates flops / bytes-accessed / collective bytes
+to the real depth (exact for homogeneous layer stacks; inner scans of nested
+stacks are fully unrolled so superblock costs are exact).  memory_analysis()
+always comes from the full-depth compile.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, cell_runnable, get_arch
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.launch.roofline import analyse, extract_metrics, save_record
+from repro.launch.steps import build_cell
+
+# archs whose params don't fit TP-only at bf16: shard d_model dims over "data"
+FSDP_ARCHS = {"deepseek-v3-671b", "qwen2-72b", "llama-3.2-vision-90b"}
+
+_EXTRAP_KEYS = ("flops", "bytes", "coll_bytes", "coll_wire_bytes")
+
+
+def _probe_plan(cfg):
+    """Returns (list of probe override dicts, counts per probe, full counts).
+
+    XLA cost analysis counts a while/scan body once and is CONSTANT in the
+    trip count, so probes compile tiny configs with the layer scans fully
+    UNROLLED (scan_layers=False): metrics are then affine in the layer counts
+    n⃗ (v = base + d⃗·n⃗) and we solve for d⃗ and evaluate at the real n⃗.
+    """
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        probes = [
+            {"first_dense_layers": 1, "n_layers": 2, "scan_layers": False},  # (1 dense, 1 moe)
+            {"first_dense_layers": 2, "n_layers": 3, "scan_layers": False},  # (2, 1)
+            {"first_dense_layers": 1, "n_layers": 3, "scan_layers": False},  # (1, 2)
+        ]
+        counts = [(1, 1), (2, 1), (1, 2)]
+        full = (cfg.first_dense_layers, cfg.n_layers - cfg.first_dense_layers)
+        return probes, counts, full
+    if cfg.family == "hybrid":
+        p = cfg.hybrid_period
+        return ([{"n_layers": 1 * p, "scan_layers": False},
+                 {"n_layers": 2 * p, "scan_layers": False}], [(1,), (2,)],
+                (cfg.n_layers // p,))
+    if cfg.family == "vlm":
+        p = cfg.cross_attn_period
+        return ([{"n_layers": 1 * p, "scan_layers": False},
+                 {"n_layers": 2 * p, "scan_layers": False}], [(1,), (2,)],
+                (cfg.n_layers // p,))
+    lead = cfg.first_dense_layers
+    return ([{"n_layers": lead + 1, "scan_layers": False},
+             {"n_layers": lead + 2, "scan_layers": False}],
+            [(1,), (2,)], (cfg.n_layers - lead,))
+
+
+def _extrapolate(probe_metrics, counts, full):
+    """Solve v = base + Σ d_i·n_i from probe points; evaluate at `full`."""
+    import numpy as np
+
+    A = np.array([[1.0] + list(map(float, c)) for c in counts])
+    out = {}
+    for key in _EXTRAP_KEYS:
+        b = np.array([m[key] for m in probe_metrics])
+        coef, *_ = np.linalg.lstsq(A, b, rcond=None)
+        # per-layer coefficients are physically non-negative; tiny probes can
+        # go negative from compile noise — clamp the SLOPE, then re-anchor the
+        # base on the largest probe so the result never undershoots it.
+        slopes = np.maximum(coef[1:], 0.0)
+        base = float(b[-1] - sum(s * n for s, n in zip(slopes, counts[-1])))
+        val = base + sum(s * n for s, n in zip(slopes, full))
+        out[key] = float(max(val, float(b.max())))
+    # per-op collective bytes: scale by the total ratio
+    base = probe_metrics[-1]
+    ratio = out["coll_bytes"] / base["coll_bytes"] if base["coll_bytes"] else 1.0
+    out["coll_by_op"] = {k: v * ratio for k, v in base["coll_by_op"].items()}
+    out["coll_counts"] = dict(base["coll_counts"])
+    return out
+
+
+def _compile_cell(cfg, shape, mesh, fsdp):
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh, fsdp=fsdp)
+    with mesh:
+        compiled = cell.jitted.lower(*cell.args).compile()
+    return cell, compiled, time.time() - t0
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *, variant: str = "baseline",
+             out_dir: str = "experiments/dryrun", fsdp=None,
+             overrides=None, probes: bool = True, verbose: bool = True):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_runnable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "variant": variant, "skipped": True, "reason": reason}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}__{variant}.skip.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        if verbose:
+            print(f"SKIP {arch} × {shape_name}: {reason}")
+        return None
+
+    # production dtype policy: bf16 params/compute; remat for train
+    cfg = cfg.replace(dtype="bfloat16",
+                      remat="full" if shape.kind == "train" else "none")
+    if fsdp is None:
+        fsdp = arch in FSDP_ARCHS
+    if overrides:
+        cfg = cfg.replace(**overrides)
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = mesh.size
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] devices={n_dev} fsdp={fsdp} "
+              f"variant={variant}", flush=True)
+
+    # full-depth compile: the coherence proof + memory analysis
+    cell, compiled, t_full = _compile_cell(cfg, shape, mesh, fsdp)
+    metrics = extract_metrics(compiled)
+    if verbose:
+        print(f"  full compile {t_full:.1f}s", flush=True)
+        print(" ", compiled.memory_analysis(), flush=True)
+
+    total_t = t_full
+    if probes:
+        plan, counts, full_counts = _probe_plan(cfg)
+        probe_metrics = []
+        for ov in plan:
+            pcfg = cfg.replace(**ov)
+            _, pc, t_p = _compile_cell(pcfg, shape, mesh, fsdp)
+            probe_metrics.append(extract_metrics(pc))
+            total_t += t_p
+            if verbose:
+                print(f"  probe {ov} compile {t_p:.1f}s flops={probe_metrics[-1]['flops']:.3e}",
+                      flush=True)
+        ex = _extrapolate(probe_metrics, counts, full_counts)
+        metrics.update(ex)
+
+    rec = analyse(cfg, shape, mesh_name, n_dev, metrics, total_t,
+                  cell.param_count, variant=variant)
+    if rec.peak_bytes > HBM_BYTES:
+        rec.note = (f"peak {rec.peak_bytes/2**30:.1f} GiB > 16 GiB v5e HBM at {n_dev} chips "
+                    f"— needs more pods / further sharding (reported honestly)")
+    path = save_record(rec, out_dir)
+    if verbose:
+        print(f"  flops/dev={rec.hlo_flops:.3e} bytes/dev={rec.hlo_bytes:.3e} "
+              f"coll/dev={rec.collective_bytes:.3e}", flush=True)
+        print(" ", rec.summary(), flush=True)
+        print(f"  -> {path}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the scan-correction probe compiles (multi-pod proof runs)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (e.g. moe_impl=dense)")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+    run_cell(args.arch, args.shape, args.mesh, variant=args.variant,
+             out_dir=args.out, fsdp=fsdp, overrides=overrides or None,
+             probes=not args.no_probes)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""Mesh construction. Functions only — importing this module never touches
+jax device state (required so tests/benches see 1 device while the dry-run
+sees its 512 forced host devices).
+
+Production target: TPU v5e pods, 256 chips (16×16) per pod; the multi-pod
+mesh prepends a "pod" axis (2×16×16 = 512 chips).  The axis contract:
+
+  pod   — data parallel across pods (DCI)
+  data  — data parallel / FSDP / ZeRO shard axis within a pod (ICI)
+  model — tensor/expert parallel axis (ICI)
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def _mk(shape: Sequence[int], names: Sequence[str], devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = 1
+    for s in shape:
+        n *= s
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {tuple(shape)} needs {n} devices, have {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before any jax import")
+    return jax.make_mesh(tuple(shape), tuple(names), devices=devices[:n],
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: Optional[int] = None) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    if pod:
+        return _mk((pod, data, model), ("pod", "data", "model"))
+    return _mk((data, model), ("data", "model"))
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    """Axes the batch is sharded over (pod folds into data parallel)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_degree(mesh: Mesh) -> int:
+    d = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        d *= mesh.shape["pod"]
+    return d
+
+
+# Hardware constants for the roofline (TPU v5e, per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_LINK_BW = 50e9             # bytes/s per link
+HBM_BYTES = 16 * 2**30         # 16 GiB per chip

@@ -1,0 +1,235 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e constants).
+
+Per (arch × shape × mesh) cell:
+    compute term    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+    memory term     = HLO_bytes_per_device / HBM_BW
+    collective term = collective_bytes_per_device / ICI_LINK_BW
+
+Sources: ``compiled.cost_analysis()`` ('flops', 'bytes accessed' — both are the
+per-device SPMD program's numbers); collective bytes parsed from
+``compiled.as_text()`` by :mod:`repro.utils.hlo`.  MODEL_FLOPS uses the
+6·N·D (train) / 2·N·D (inference) convention with MoE active-param scaling,
+plus the causal-attention term — the "useful compute" yardstick that exposes
+remat/dispatch/redundancy waste in the compiled program.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+from repro.utils.hlo import CollectiveStats, collective_bytes_from_hlo
+
+
+# ---------------------------------------------------------------------------
+# "useful" model FLOPs
+# ---------------------------------------------------------------------------
+
+
+def active_param_count(cfg: ArchConfig, total_params: int, moe_params: int) -> float:
+    """Params touched per token: scale routed experts by top_k/E."""
+    if cfg.n_experts:
+        return (total_params - moe_params) + moe_params * cfg.top_k / cfg.n_experts
+    return float(total_params)
+
+
+def matmul_param_count(cfg: ArchConfig) -> tuple[float, float]:
+    """(total matmul params excl. embed-lookup, routed-expert matmul params).
+
+    Analytic (independent of init) so the roofline doesn't need live trees.
+    """
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    hd = cfg.head_dim_actual
+    H, KH = cfg.n_heads, cfg.n_kv_heads
+
+    attn = 0.0
+    if cfg.attn_kind == "gqa":
+        attn = D * hd * (H + 2 * KH) + H * hd * D
+    elif cfg.attn_kind == "mla":
+        attn = (D * cfg.q_lora_rank + cfg.q_lora_rank * H * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                + D * cfg.kv_lora_rank + D * cfg.qk_rope_dim
+                + cfg.kv_lora_rank * H * (cfg.qk_nope_dim + cfg.v_head_dim)
+                + H * cfg.v_head_dim * D)
+
+    def ffn_params(width):
+        return (3 if cfg.ffn_kind == "swiglu" else 2) * D * width
+
+    moe_routed = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        ssm_dproj = 2 * (cfg.ssm_expand * D) + 2 * cfg.ssm_groups * cfg.ssm_state * 2  # rough
+        d_inner = cfg.ssm_expand * D
+        n_heads_ssm = d_inner // cfg.ssm_head_dim
+        mamba = D * (2 * d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + n_heads_ssm) + d_inner * D
+        if cfg.family == "hybrid":
+            n_super = L // cfg.hybrid_period
+            shared = attn + ffn_params(cfg.d_ff)
+            total = L * mamba + n_super * shared + D * V  # shared block *computes* n_super times
+        else:
+            total = L * mamba + D * V
+        return total, 0.0
+
+    if cfg.n_experts:
+        n_dense = cfg.first_dense_layers
+        n_moe = L - n_dense
+        moe_routed = n_moe * cfg.n_experts * 3 * D * cfg.d_ff_expert
+        shared = n_moe * cfg.n_shared_experts * 3 * D * cfg.d_ff_expert
+        router = n_moe * D * cfg.n_experts
+        dense = n_dense * ffn_params(cfg.d_ff_dense or cfg.d_ff)
+        total = L * attn + moe_routed + shared + router + dense + D * V
+        if cfg.mtp:
+            total += 2 * D * D + attn + ffn_params(cfg.d_ff_dense or cfg.d_ff)
+        return total, moe_routed
+
+    if cfg.family == "vlm":
+        total = L * (attn + ffn_params(cfg.d_ff)) + D * V
+        if cfg.vision_dim and cfg.vision_dim != D:
+            total += cfg.vision_dim * D
+        return total, 0.0
+
+    total = L * (attn + ffn_params(cfg.d_ff)) + D * V
+    if cfg.family == "audio":
+        total += cfg.frame_dim * D
+    return total, 0.0
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Ideal (causal-aware) model FLOPs for this cell, whole batch, all devices."""
+    total, routed = matmul_param_count(cfg)
+    n_active = active_param_count(cfg, total, routed)
+    B, T = shape.global_batch, shape.seq_len
+    # per-head score/readout widths (MLA keys are nope+rope, values v_head_dim)
+    if cfg.attn_kind == "mla":
+        dk, dv = cfg.qk_nope_dim + cfg.qk_rope_dim, cfg.v_head_dim
+    else:
+        dk = dv = cfg.head_dim_actual
+    kv_width = dk + dv
+    L_attn = cfg.n_layers if cfg.family not in ("ssm", "hybrid") else (
+        cfg.n_layers // cfg.hybrid_period if cfg.family == "hybrid" else 0)
+
+    if shape.kind == "train":
+        flops = 6.0 * n_active * B * T
+        # causal attention fwd+bwd: 3 × 2·(dk+dv)·T·S·H, halved for causality
+        flops += 3.0 * L_attn * B * T * T * cfg.n_heads * kv_width
+        if cfg.family in ("ssm", "hybrid"):
+            d_inner = cfg.ssm_expand * cfg.d_model
+            flops += 3 * 2.0 * cfg.n_layers * B * T * cfg.ssm_chunk * d_inner  # SSD intra-chunk
+        return flops
+    if shape.kind == "prefill":
+        flops = 2.0 * n_active * B * T
+        flops += 1.0 * L_attn * B * T * T * cfg.n_heads * kv_width  # causal fwd
+        return flops
+    # decode: one token per sequence, full-cache attention reads
+    flops = 2.0 * n_active * B
+    flops += 2.0 * L_attn * B * T * cfg.n_heads * kv_width
+    return flops
+
+
+# ---------------------------------------------------------------------------
+# record
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineRecord:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # raw per-device numbers
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_by_op: dict
+    # memory analysis (per device)
+    arg_bytes: float
+    out_bytes: float
+    temp_bytes: float
+    peak_bytes: float
+    # derived
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float
+    useful_ratio: float
+    param_count: int
+    compile_s: float
+    variant: str = "baseline"
+    note: str = ""
+
+    def summary(self) -> str:
+        return (f"{self.arch:>24s} {self.shape:<12s} {self.mesh:<6s} "
+                f"C={self.compute_s*1e3:9.3f}ms M={self.memory_s*1e3:9.3f}ms "
+                f"X={self.collective_s*1e3:9.3f}ms -> {self.bottleneck:<10s} "
+                f"useful={self.useful_ratio:6.3f} peak={self.peak_bytes/2**30:7.2f}GiB")
+
+
+def extract_metrics(compiled) -> dict:
+    """Pull (per-device) flops / bytes / collective stats / memory from a
+    compiled artifact.  NOTE: XLA cost analysis counts a while/scan body ONCE,
+    not × trip-count — the dry-run corrects via probe extrapolation."""
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    ma = compiled.memory_analysis()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": coll.total_bytes,
+        "coll_wire_bytes": coll.total_wire_bytes,
+        "coll_by_op": dict(coll.bytes_by_op),
+        "coll_counts": dict(coll.count_by_op),
+        "arg_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+        "out_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+        "alias_bytes": float(getattr(ma, "alias_size_in_bytes", 0)),
+    }
+
+
+def analyse(cfg: ArchConfig, shape: ShapeSpec, mesh_name: str, n_devices: int,
+            metrics: dict, compile_s: float, param_count: int,
+            variant: str = "baseline", note: str = "") -> RooflineRecord:
+    flops = metrics["flops"]
+    nbytes = metrics["bytes"]
+    arg_b, out_b = metrics["arg_bytes"], metrics["out_bytes"]
+    tmp_b, alias_b = metrics["temp_bytes"], metrics["alias_bytes"]
+    peak = arg_b + out_b + tmp_b - alias_b
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    coll_s = metrics["coll_bytes"] / ICI_LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = (mf / n_devices) / flops if flops else 0.0
+    return RooflineRecord(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops=flops, hlo_bytes=nbytes,
+        collective_bytes=metrics["coll_bytes"], collective_by_op=metrics["coll_by_op"],
+        arg_bytes=arg_b, out_bytes=out_b, temp_bytes=tmp_b, peak_bytes=peak,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck, model_flops_total=mf, useful_ratio=useful,
+        param_count=param_count, compile_s=compile_s, variant=variant, note=note,
+    )
+
+
+def save_record(rec: RooflineRecord, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{rec.arch}__{rec.shape}__{rec.mesh}__{rec.variant}.json")
+    with open(path, "w") as f:
+        json.dump(asdict(rec), f, indent=1)
+    return path
+
+
+def load_records(out_dir: str):
+    recs = []
+    if not os.path.isdir(out_dir):
+        return recs
+    for fn in sorted(os.listdir(out_dir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(out_dir, fn)) as f:
+                recs.append(RooflineRecord(**json.load(f)))
+    return recs

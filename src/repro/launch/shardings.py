@@ -1,0 +1,205 @@
+"""Partition rules: parameter/activation PartitionSpecs for DP/FSDP/TP/EP.
+
+Rules pattern-match on leaf *paths* (the naming contract of models/) and give
+a spec for the **trailing** dims; leading stack dims (layer scan, superblock
+nesting) are padded with ``None``.  ``fsdp=True`` additionally shards the
+d_model-ish dims over the data axis (required to fit ≥70B param models).
+
+This is the coarse-grained-DSM layout policy of the paper at the parameter
+level: each rule decides which mesh axis "owns" which package of each tensor.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import tree_flatten_with_paths
+
+
+def _rules(fsdp_axis) -> List[Tuple[str, Tuple]]:
+    f = fsdp_axis  # None or "data"
+    return [
+        # embeddings / heads
+        (r"embed\.table$", ("model", f)),
+        (r"head\.w$", (f, "model")),
+        (r"in_proj\.w$", (None, f)),          # audio frontend proj
+        (r"vision_proj\.w$", (None, f)),
+        # attention (GQA)
+        (r"attn\.wq$", (f, "model", None)),
+        (r"attn\.wk$", (f, "model", None)),
+        (r"attn\.wv$", (f, "model", None)),
+        (r"attn\.wo$", ("model", None, f)),
+        (r"attn\.b[qkv]$", ("model", None)),
+        (r"attn\.[qk]_norm$", (None,)),
+        # attention (MLA)
+        (r"attn\.w_dq$", (f, None)),
+        (r"attn\.w_uq$", (None, "model", None)),
+        (r"attn\.w_dkv$", (f, None)),
+        (r"attn\.w_kr$", (f, None)),
+        (r"attn\.w_uk$", (None, "model", None)),
+        (r"attn\.w_uv$", (None, "model", None)),
+        (r"attn\.kv_norm$", (None,)),
+        # dense ffn
+        (r"ffn\.w_gate$", (f, "model")),
+        (r"ffn\.w_up$", (f, "model")),
+        (r"ffn\.w_down$", ("model", f)),
+        (r"ffn\.w_in$", (f, "model")),
+        (r"ffn\.w_out$", ("model", f)),
+        (r"ffn\.b_in$", ("model",)),
+        (r"ffn\.b_out$", (None,)),
+        # MoE: experts over the model axis (EP), optional fsdp on d_model dim
+        (r"moe\.router$", (f, None)),
+        (r"moe\.w_gate$", ("model", f, None)),
+        (r"moe\.w_up$", ("model", f, None)),
+        (r"moe\.w_down$", ("model", None, f)),
+        (r"moe\.shared\.w_gate$", (f, "model")),
+        (r"moe\.shared\.w_up$", (f, "model")),
+        (r"moe\.shared\.w_down$", ("model", f)),
+        # mamba2
+        (r"mamba\.in_proj$", (f, "model")),
+        (r"mamba\.conv_w$", (None, "model")),
+        (r"mamba\.conv_b$", ("model",)),
+        (r"mamba\.(A_log|dt_bias|D)$", (None,)),
+        (r"mamba\.norm$", ("model",)),
+        (r"mamba\.out_proj$", ("model", f)),
+        # mtp
+        (r"mtp\.proj$", (f, None)),
+        # norms and anything small: replicated
+        (r"(norm|norm1|norm2|final_norm|norm_h|norm_e)\.(scale|bias)$", None),
+    ]
+
+
+def param_specs(params: Any, *, fsdp: bool = False) -> Any:
+    """Pytree of PartitionSpecs matching `params` (works on SDS trees)."""
+    rules = _rules("data" if fsdp else None)
+    flat = tree_flatten_with_paths(params)
+    specs = []
+    for path, leaf in flat:
+        spec = None
+        for pat, trailing in rules:
+            if re.search(pat, path):
+                if trailing is None:
+                    spec = P()
+                else:
+                    ndim = len(leaf.shape)
+                    pad = (None,) * (ndim - len(trailing))
+                    dims = pad + tuple(trailing)
+                    # drop axes that don't divide the dim size
+                    fixed = []
+                    for size, ax in zip(leaf.shape, dims):
+                        if ax is not None and size % _axis_div(ax) != 0:
+                            fixed.append(None)
+                        else:
+                            fixed.append(ax)
+                    spec = P(*fixed)
+                break
+        if spec is None:
+            spec = P()  # replicate by default
+        specs.append(spec)
+    return jax.tree.unflatten(jax.tree.structure(params), specs)
+
+
+_AXIS_SIZES = {"model": 16, "data": 16, "pod": 2}
+CURRENT_MESH = None  # registered by set_mesh_axis_sizes; used by the EP MoE
+
+
+def _axis_div(ax) -> int:
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= _AXIS_SIZES.get(a, 1)
+        return n
+    return _AXIS_SIZES.get(ax, 1)
+
+
+def set_mesh_axis_sizes(mesh: Mesh) -> None:
+    """Record mesh axis sizes so rules can drop non-dividing axes."""
+    global _AXIS_SIZES, CURRENT_MESH
+    _AXIS_SIZES = {name: int(mesh.shape[name]) for name in mesh.axis_names}
+    CURRENT_MESH = mesh
+
+
+def batch_spec(mesh: Mesh, *, seq_axis=None) -> P:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return P(dp, seq_axis)
+
+
+def _axis_size_in(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= int(mesh.shape[a])
+        return n
+    return int(mesh.shape[ax])
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide (e.g. batch=1 decode)."""
+    dims = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    fixed = []
+    for size, ax in zip(shape, dims):
+        fixed.append(ax if (ax is None or size % _axis_size_in(mesh, ax) == 0) else None)
+    return P(*fixed)
+
+
+def sanitize_tree(specs, sds_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, x: sanitize_spec(s, x.shape, mesh),
+        specs, sds_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """KV/SSM caches: batch dim over data axes, head-ish dims over model.
+
+    Cache leaves look like (layers..., B, S, KH, hd) / (layers..., B, S, r) /
+    mamba conv (L, B, K, C) / ssm (L, B, H, N, P).  We shard the batch dim
+    (first dim after the leading stack dims... identified as the dim whose
+    size equals the global batch) over data, and any KH/H/C dim over model
+    when divisible.  Heuristic by name for robustness.
+    """
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    model_n = int(mesh.shape["model"])
+
+    flat = tree_flatten_with_paths(cache)
+    specs = []
+    for path, leaf in flat:
+        nd = len(leaf.shape)
+        if path.endswith(".k") or path.endswith(".v") or \
+                path.endswith(".k_q") or path.endswith(".v_q") or \
+                path.endswith(".k_s") or path.endswith(".v_s"):
+            # (..., B, S, KH, hd|1)
+            lead = (None,) * (nd - 4)
+            kh = leaf.shape[-2]
+            specs.append(P(*lead, dp, None, "model" if kh % model_n == 0 else None, None))
+        elif path.endswith(".c_kv") or path.endswith(".k_rope"):
+            lead = (None,) * (nd - 3)
+            specs.append(P(*lead, dp, None, None))
+        elif path.endswith(".conv"):
+            # (..., B, K, C)
+            lead = (None,) * (nd - 3)
+            c = leaf.shape[-1]
+            specs.append(P(*lead, dp, None, "model" if c % model_n == 0 else None))
+        elif path.endswith(".ssm"):
+            # (..., B, H, N, P)
+            lead = (None,) * (nd - 4)
+            h = leaf.shape[-3]
+            specs.append(P(*lead, dp, "model" if h % model_n == 0 else None, None, None))
+        else:
+            specs.append(P())
+    return jax.tree.unflatten(jax.tree.structure(cache), specs)
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,186 @@
+"""Step builders: train_step / prefill_step / decode_step with shardings.
+
+``build_cell`` assembles everything a dry-run or a real run needs for one
+(arch × shape × mesh) cell: the jitted step with in/out shardings and the
+ShapeDtypeStruct inputs (never allocating).  The same builders drive the real
+CPU-scale training/serving drivers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch import shardings as sh
+from repro.models.build import Model, build_model
+from repro.optim import Optimizer, adamw, apply_updates
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, model: Model):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, T = shape.global_batch, shape.seq_len
+    f32, bf16, i32 = jnp.float32, jnp.bfloat16, jnp.int32
+    act = bf16 if cfg.dtype != "float32" else f32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch = {"frames": jax.ShapeDtypeStruct((B, T, cfg.frame_dim), act),
+                     "labels": jax.ShapeDtypeStruct((B, T), i32)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, T), i32),
+                     "labels": jax.ShapeDtypeStruct((B, T), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_tokens, cfg.vision_dim or cfg.d_model), act)
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(lambda: model.init_cache(B, T))
+    batch = {"cache": cache,
+             "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+             "pos": jax.ShapeDtypeStruct((), i32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.vision_dim or cfg.d_model), act)
+    return batch
+
+
+def batch_shard_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, model: Model,
+                      batch_sds) -> Any:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if shape.kind in ("train", "prefill"):
+        specs = {k: P(dp, *([None] * (len(v.shape) - 1))) for k, v in batch_sds.items()}
+        return sh.sanitize_tree(specs, batch_sds, mesh)
+    specs = {"cache": sh.cache_specs(batch_sds["cache"], mesh),
+             "tokens": P(dp, None),
+             "pos": P()}
+    if "vision_embeds" in batch_sds:
+        specs["vision_embeds"] = P(dp, None, None)
+    return sh.sanitize_tree(specs, batch_sds, mesh)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, opt: Optimizer, *, clip_norm: Optional[float] = 1.0):
+    from repro.optim import clip_by_global_norm
+    grad_dtype = getattr(model.cfg, "grad_reduce_dtype", "") or None
+
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+        if grad_dtype:
+            # paper-beyond: reduce DP gradients in bf16 (half the wire bytes);
+            # optimizer moments stay fp32.
+            grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics = dict(metrics, grad_norm=gnorm)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.forward(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, batch):
+        logits, cache = model.decode_step(params, batch["cache"], batch["tokens"], batch["pos"])
+        return logits, cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Cell:
+    cfg: ArchConfig
+    shape: ShapeSpec
+    mesh: Mesh
+    jitted: Any          # jax.stages.Wrapped — call .lower(*cell.args)
+    args: tuple          # SDS args for lower()
+    param_count: int
+    param_bytes: int
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, *,
+               fsdp: bool = False, opt: Optional[Optimizer] = None) -> Cell:
+    """Assemble the jitted step + SDS inputs for one (arch × shape × mesh)."""
+    from repro.utils.tree import tree_bytes, tree_count
+
+    sh.set_mesh_axis_sizes(mesh)
+    dp_axes_cfg = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp = 1
+    for ax in dp_axes_cfg:
+        dp *= int(mesh.shape[ax])
+    cfg = cfg.replace(batch_axes=dp_axes_cfg)
+    model = build_model(cfg, data_groups=dp)
+
+    params_sds = abstract_params(model)
+    p_specs = sh.param_specs(params_sds, fsdp=fsdp)
+    p_shard = sh.to_shardings(p_specs, mesh)
+
+    batch_sds = input_specs(cfg, shape, model)
+    b_specs = batch_shard_specs(cfg, shape, mesh, model, batch_sds)
+    b_shard = sh.to_shardings(b_specs, mesh)
+
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    repl = NamedSharding(mesh, P())
+
+    vocab_ax = "model" if cfg.vocab % int(mesh.shape["model"]) == 0 else None
+    B, T = shape.global_batch, shape.seq_len
+    out_T = T if (shape.kind == "prefill" and not cfg.prefill_last_only) else 1
+    logits_spec = sh.sanitize_spec(P(dp_axes, None, vocab_ax),
+                                   (B, out_T, cfg.vocab), mesh)
+
+    if shape.kind == "train":
+        opt = opt or adamw(lr=3e-4)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        o_specs = sh.param_specs(opt_sds, fsdp=fsdp) if not isinstance(opt_sds, tuple) or opt_sds else ()
+        o_shard = sh.to_shardings(o_specs, mesh) if o_specs != () else ()
+        step_fn = make_train_step(model, opt)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, o_shard, b_shard, repl),
+            out_shardings=(p_shard, o_shard, repl, repl),
+            donate_argnums=(0, 1),
+        )
+        args = (params_sds, opt_sds, batch_sds, jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(model)
+        logits_shard = NamedSharding(mesh, logits_spec)
+        jitted = jax.jit(step_fn, in_shardings=(p_shard, b_shard),
+                         out_shardings=logits_shard)
+        args = (params_sds, batch_sds)
+    else:  # decode
+        step_fn = make_decode_step(model)
+        logits_shard = NamedSharding(mesh, logits_spec)
+        cache_out = sh.to_shardings(b_specs["cache"], mesh)
+        jitted = jax.jit(step_fn, in_shardings=(p_shard, b_shard),
+                         out_shardings=(logits_shard, cache_out),
+                         donate_argnums=(1,))  # cache is updated in place
+        args = (params_sds, batch_sds)
+
+    return Cell(cfg, shape, mesh, jitted, args,
+                tree_count(params_sds), tree_bytes(params_sds))

@@ -1,0 +1,5 @@
+from repro.models.build import Model, build_model
+from repro.models.common import rms_norm, layer_norm, apply_rope, softmax_cross_entropy
+
+__all__ = ["Model", "build_model", "rms_norm", "layer_norm", "apply_rope",
+           "softmax_cross_entropy"]

@@ -1,0 +1,378 @@
+"""Attention: GQA/MHA (+ qk-norm, qkv-bias, RoPE), MLA, cross-attention.
+
+Train/prefill paths use a **blocked online-softmax attention** (pure-jnp flash
+analogue, lax.scan over KV blocks) so activation memory stays O(T·block)
+instead of O(T·S) — the same algorithm the Pallas kernel in
+``kernels/flash_attention`` implements with VMEM tiles; set
+``attention_impl="pallas"`` to lower through the kernel on TPU.
+
+Decode paths attend a single query step over a KV cache.  MLA decode uses the
+*absorbed* formulation (queries projected into the compressed c-space), so the
+cache stays at ``kv_lora_rank + rope_dim`` per token — the memory-roofline win
+MLA exists for.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rms_norm, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0, bias=None):
+    """Reference full-materialisation attention (oracle for tests).
+
+    q: (B, T, KH, G, dh); k, v: (B, S, KH, dh).
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("btkgd,bskd->btkgs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if bias is not None:
+        scores = scores + bias
+    if causal:
+        tpos = q_offset + jnp.arange(q.shape[1])
+        spos = jnp.arange(k.shape[1])
+        mask = tpos[:, None] >= spos[None, :]
+        scores = jnp.where(mask[None, :, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("btkgs,bskd->btkgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def blocked_attention(q, k, v, *, causal: bool, q_offset=0, block_k: int = 512,
+                      full_unroll: bool = False):
+    """Online-softmax attention, scanning KV blocks (flash-style, pure jnp).
+
+    q: (B, T, KH, G, dk); k: (B, S, KH, dk); v: (B, S, KH, dv)  →  (B, T, KH, G, dv)
+    (dk may differ from dv — e.g. MLA's nope+rope keys vs v_head_dim values.)
+    """
+    B, T, KH, G, dk = q.shape
+    dv = v.shape[-1]
+    S = k.shape[1]
+    scale = 1.0 / math.sqrt(dk)
+    nblk = (S + block_k - 1) // block_k
+    pad = nblk * block_k - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # (nblk, B, bk, KH, d)
+    kb = k.reshape(B, nblk, block_k, KH, dk).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block_k, KH, dv).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(jnp.float32)
+    tpos = q_offset + jnp.arange(T)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        s = jnp.einsum("btkgd,bskd->btkgs", qf, kj.astype(jnp.float32)) * scale
+        spos = j * block_k + jnp.arange(block_k)
+        valid = spos < S
+        if causal:
+            mask = (tpos[:, None] >= spos[None, :]) & valid[None, :]
+        else:
+            mask = jnp.broadcast_to(valid[None, :], (T, block_k))
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("btkgs,bskd->btkgd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, T, KH, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, T, KH, G), jnp.float32)
+    a0 = jnp.zeros((B, T, KH, G, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (jnp.arange(nblk), kb, vb),
+                                  unroll=nblk if full_unroll else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def _run_attention(q, k, v, *, causal, q_offset=0, impl: str = "blocked", block_k: int = 512,
+                   full_unroll: bool = False):
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    return blocked_attention(q, k, v, causal=causal, q_offset=q_offset, block_k=block_k,
+                             full_unroll=full_unroll)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+class GQAConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    causal: bool = True
+    attention_impl: str = "blocked"
+    block_k: int = 512
+    full_unroll: bool = False  # unroll the KV-block scan (dry-run flop probes)
+
+
+def init_gqa(key, cfg: GQAConfig, dtype=jnp.float32):
+    D, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H, hd), in_axis=0, dtype=dtype),
+        "wk": dense_init(ks[1], (D, KH, hd), in_axis=0, dtype=dtype),
+        "wv": dense_init(ks[2], (D, KH, hd), in_axis=0, dtype=dtype),
+        "wo": dense_init(ks[3], (H, hd, D), in_axis=1, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KH, hd), dtype)
+        p["bv"] = jnp.zeros((KH, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _gqa_qkv(p, x, cfg: GQAConfig, positions):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(p, x, cfg: GQAConfig, *, positions=None):
+    """Full-sequence (train / prefill) self-attention."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q, k, v = _gqa_qkv(p, x, cfg, positions)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, T, cfg.n_kv_heads, G, cfg.head_dim)
+    out = _run_attention(qg, k, v, causal=cfg.causal, impl=cfg.attention_impl,
+                         block_k=cfg.block_k, full_unroll=cfg.full_unroll)
+    out = out.reshape(B, T, cfg.n_heads, cfg.head_dim)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S, KH, hd)
+    v: jax.Array
+    # position is tracked by the caller (one scalar for the whole stack)
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(token, head) scales — halves decode cache reads
+    vs bf16 (the §Perf lever for memory-bound decode cells)."""
+
+    k_q: jax.Array    # (B, S, KH, hd) int8
+    k_s: jax.Array    # (B, S, KH, 1)  bf16 scale
+    v_q: jax.Array
+    v_s: jax.Array
+
+
+def _quantize_i8(x):
+    """x (..., hd) → (int8 values, per-(...) scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequantize_i8(q, scale):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+def init_gqa_cache(cfg: GQAConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   quantized: bool = False):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if quantized:
+        sshape = shape[:-1] + (1,)
+        return QuantKVCache(jnp.zeros(shape, jnp.int8), jnp.zeros(sshape, jnp.bfloat16),
+                            jnp.zeros(shape, jnp.int8), jnp.zeros(sshape, jnp.bfloat16))
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def gqa_decode(p, cache, x_t, cfg: GQAConfig, pos):
+    """One-token decode: x_t (B, 1, D), pos scalar — returns (cache', out).
+
+    Accepts either a bf16 :class:`KVCache` or an int8 :class:`QuantKVCache`
+    (dequantised on read; new entries quantised on write).
+    """
+    B = x_t.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k_t, v_t = _gqa_qkv(p, x_t, cfg, positions)
+    if isinstance(cache, QuantKVCache):
+        kq_t, ks_t = _quantize_i8(k_t)
+        vq_t, vs_t = _quantize_i8(v_t)
+        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+            buf, val.astype(buf.dtype), pos, axis=1)
+        new_cache = QuantKVCache(upd(cache.k_q, kq_t), upd(cache.k_s, ks_t),
+                                 upd(cache.v_q, vq_t), upd(cache.v_s, vs_t))
+        k = _dequantize_i8(new_cache.k_q, new_cache.k_s).astype(x_t.dtype)
+        v = _dequantize_i8(new_cache.v_q, new_cache.v_s).astype(x_t.dtype)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_t.astype(cache.k.dtype), pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_t.astype(cache.v.dtype), pos, axis=1)
+        new_cache = KVCache(k, v)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, cfg.n_kv_heads, G, cfg.head_dim)
+    # mask out cache positions beyond pos via the causal mask with q_offset=pos
+    out = naive_attention(qg, k, v, causal=True, q_offset=pos)
+    out = out.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    return new_cache, jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (llama-3.2-vision): queries from text, K/V from vision tokens
+# ---------------------------------------------------------------------------
+
+
+def cross_attend(p, x, kv_embeds, cfg: GQAConfig):
+    """x (B,T,D) attends over kv_embeds (B,Sv,D); non-causal, no RoPE."""
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_embeds, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_embeds, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, T, cfg.n_kv_heads, G, cfg.head_dim)
+    out = _run_attention(qg, k, v, causal=False, impl=cfg.attention_impl,
+                         block_k=cfg.block_k, full_unroll=cfg.full_unroll)
+    out = out.reshape(B, T, cfg.n_heads, cfg.head_dim)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+class MLAConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    attention_impl: str = "blocked"
+    block_k: int = 512
+    full_unroll: bool = False
+
+
+def init_mla(key, cfg: MLAConfig, dtype=jnp.float32):
+    D, H = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (D, r_q), in_axis=0, dtype=dtype),
+        "q_norm": jnp.ones((r_q,), dtype),
+        "w_uq": dense_init(ks[1], (r_q, H, dn + dr), in_axis=0, dtype=dtype),
+        "w_dkv": dense_init(ks[2], (D, r_kv), in_axis=0, dtype=dtype),
+        "kv_norm": jnp.ones((r_kv,), dtype),
+        "w_kr": dense_init(ks[3], (D, dr), in_axis=0, dtype=dtype),
+        "w_uk": dense_init(ks[4], (r_kv, H, dn), in_axis=0, dtype=dtype),
+        "w_uv": dense_init(ks[5], (r_kv, H, dv), in_axis=0, dtype=dtype),
+        "wo": dense_init(ks[6], (H, dv, D), in_axis=1, dtype=dtype),
+    }
+
+
+def _mla_q(p, x, cfg: MLAConfig, positions):
+    cq = rms_norm(jnp.einsum("btd,dr->btr", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("btr,rhk->bthk", cq, p["w_uq"])
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, cfg: MLAConfig, positions):
+    c_kv = rms_norm(jnp.einsum("btd,dr->btr", x, p["w_dkv"]), p["kv_norm"])
+    k_rope = jnp.einsum("btd,dk->btk", x, p["w_kr"])[:, :, None, :]   # shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attend(p, x, cfg: MLAConfig, *, positions=None):
+    """Train/prefill MLA: expand c_kv to per-head K/V and run blocked attention."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_ckv(p, x, cfg, positions)
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"])
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"])
+    H = cfg.n_heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)                  # (B,T,H,dn+dr)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, T, H, cfg.qk_rope_dim))], axis=-1)
+    # treat every head as its own KV group (KH=H, G=1) for the blocked impl
+    qg = q[:, :, :, None, :].transpose(0, 1, 2, 3, 4).reshape(B, T, H, 1, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    out = _run_attention(qg, k, v, causal=True, impl=cfg.attention_impl,
+                         block_k=cfg.block_k, full_unroll=cfg.full_unroll)
+    out = out.reshape(B, T, H, cfg.v_head_dim)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S, kv_lora_rank) — the compressed cache
+    k_rope: jax.Array  # (B, S, qk_rope_dim)
+
+
+def init_mla_cache(cfg: MLAConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return MLACache(
+        jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    )
+
+
+def mla_decode(p, cache: MLACache, x_t, cfg: MLAConfig, pos):
+    """Absorbed-matrix MLA decode: score/readout directly in c-space.
+
+    scores_h(s) = q_nope_h · (W_uk_h c_s) + q_rope_h · k_rope_s
+                = (W_uk_hᵀ q_nope_h) · c_s + q_rope_h · k_rope_s
+    out_h       = Σ_s p_h(s) (W_uv_h c_s) = W_uv_h (Σ_s p_h(s) c_s)
+    — per-token cache stays (kv_lora_rank + rope_dim).
+    """
+    B = x_t.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q_nope, q_rope = _mla_q(p, x_t, cfg, positions)                  # (B,1,H,·)
+    c_t, kr_t = _mla_ckv(p, x_t, cfg, positions)                     # (B,1,r), (B,1,dr)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_t.astype(cache.c_kv.dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_t.astype(cache.k_rope.dtype), pos, axis=1)
+
+    q_c = jnp.einsum("bthk,rhk->bthr", q_nope, p["w_uk"])            # absorbed query
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    s_c = jnp.einsum("bthr,bsr->bths", q_c.astype(jnp.float32), c_kv.astype(jnp.float32))
+    s_r = jnp.einsum("bthk,bsk->bths", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    scores = (s_c + s_r) * scale                                     # (B,1,H,S)
+    spos = jnp.arange(c_kv.shape[1])
+    scores = jnp.where((spos <= pos)[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_c = jnp.einsum("bths,bsr->bthr", w, c_kv.astype(jnp.float32))  # (B,1,H,r)
+    out = jnp.einsum("bthr,rhk->bthk", o_c.astype(x_t.dtype), p["w_uv"])
+    return MLACache(c_kv, k_rope), jnp.einsum("bthk,hkd->btd", out, p["wo"])

@@ -1,0 +1,633 @@
+"""Model assembly: every assigned architecture family from one set of blocks.
+
+Families:
+  dense / moe / vlm — decoder transformer (GQA or MLA attention; dense or MoE
+      FFN; vlm adds a cross-attention layer closing every superblock, attending
+      over stub patch embeddings).
+  ssm — Mamba2 (SSD) stack, attention-free.
+  hybrid — zamba2: Mamba2 backbone with a weight-shared attention block applied
+      after every ``hybrid_period`` mamba layers.
+  audio — hubert: encoder-only (non-causal) transformer over stub frame
+      embeddings with a per-frame classification head.
+
+All stacks use scan-over-layers (stacked params, small HLO).  The returned
+:class:`Model` exposes init / loss_fn / forward / init_cache / decode_step —
+the exact surface ``launch/steps.py`` lowers for train and serve cells.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import (
+    GQAConfig,
+    KVCache,
+    MLACache,
+    MLAConfig,
+    cross_attend,
+    gqa_attend,
+    gqa_decode,
+    init_gqa,
+    init_gqa_cache,
+    init_mla,
+    init_mla_cache,
+    mla_attend,
+    mla_decode,
+)
+from repro.models.common import (
+    bf16_boundary,
+    chunked_softmax_cross_entropy,
+    dense_init,
+    embed_init,
+    layer_norm,
+    rms_norm,
+    softmax_cross_entropy,
+)
+from repro.models.ffn import MoEConfig, dense_ffn, init_dense_ffn, init_moe, moe_ffn
+from repro.models.mamba import (
+    MambaCache,
+    SSMConfig,
+    init_mamba2,
+    init_mamba_cache,
+    mamba2_decode,
+    mamba2_forward,
+)
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable                    # rng -> params
+    loss_fn: Callable                 # (params, batch) -> (loss, metrics)
+    forward: Callable                 # (params, batch) -> logits  (prefill path)
+    init_cache: Optional[Callable]    # (batch, max_len) -> cache zeros
+    decode_step: Optional[Callable]   # (params, cache, tokens(B,1), pos) -> (logits, cache)
+
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _gqa_cfg(cfg: ArchConfig, causal=None, n_kv=None) -> GQAConfig:
+    return GQAConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=n_kv if n_kv is not None else cfg.n_kv_heads,
+        head_dim=cfg.head_dim_actual,
+        qk_norm=cfg.qk_norm,
+        qkv_bias=cfg.qkv_bias,
+        rope_theta=cfg.rope_theta,
+        causal=cfg.causal if causal is None else causal,
+        attention_impl=cfg.attention_impl,
+        block_k=cfg.block_k,
+        full_unroll=not cfg.scan_layers,
+    )
+
+
+def _mla_cfg(cfg: ArchConfig) -> MLAConfig:
+    return MLAConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        q_lora_rank=cfg.q_lora_rank,
+        kv_lora_rank=cfg.kv_lora_rank,
+        qk_nope_dim=cfg.qk_nope_dim,
+        qk_rope_dim=cfg.qk_rope_dim,
+        v_head_dim=cfg.v_head_dim,
+        rope_theta=cfg.rope_theta,
+        attention_impl=cfg.attention_impl,
+        block_k=cfg.block_k,
+        full_unroll=not cfg.scan_layers,
+    )
+
+
+def _moe_cfg(cfg: ArchConfig, data_groups: int) -> MoEConfig:
+    return MoEConfig(
+        d_model=cfg.d_model,
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        d_ff_expert=cfg.d_ff_expert,
+        n_shared=cfg.n_shared_experts,
+        capacity_factor=cfg.capacity_factor,
+        impl=cfg.moe_impl,
+        aux_loss_weight=cfg.aux_loss_weight,
+        data_groups=data_groups,
+    )
+
+
+def _ssm_cfg(cfg: ArchConfig) -> SSMConfig:
+    return SSMConfig(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim,
+        expand=cfg.ssm_expand,
+        n_groups=cfg.ssm_groups,
+        conv_kernel=4,
+        chunk=cfg.ssm_chunk,
+        ssd_impl=cfg.ssd_impl,
+        # NOTE: the SSD inter-chunk recurrence stays a scan even in flop probes:
+        # its body is only the (H,N,P) state update (≈0 FLOPs vs the chunk GEMMs
+        # which live OUTSIDE the scan and are fully counted); unrolling nc=256
+        # chunks at 32k seq explodes compile time for nothing.
+        full_unroll=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def _init_norm(cfg: ArchConfig, dtype):
+    if cfg.norm_kind == "layer":
+        return {"scale": jnp.ones((cfg.d_model,), dtype), "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def _norm(x, p, cfg: ArchConfig):
+    if cfg.norm_kind == "layer":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# transformer blocks (init + train + decode)
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: ArchConfig, dtype, n_kv=None):
+    if cfg.attn_kind == "mla":
+        return init_mla(key, _mla_cfg(cfg), dtype)
+    return init_gqa(key, _gqa_cfg(cfg, n_kv=n_kv), dtype)
+
+
+def _init_block(key, cfg: ArchConfig, *, ffn: str, data_groups: int, dtype, n_kv=None):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": _init_norm(cfg, dtype), "norm2": _init_norm(cfg, dtype),
+         "attn": _init_attn(k1, cfg, dtype, n_kv=n_kv)}
+    if ffn == "moe":
+        p["moe"] = init_moe(k2, _moe_cfg(cfg, data_groups), dtype)
+    elif ffn == "dense_wide":
+        p["ffn"] = init_dense_ffn(k2, cfg.d_model, cfg.d_ff_dense or cfg.d_ff,
+                                  kind=cfg.ffn_kind, bias=cfg.ffn_bias, dtype=dtype)
+    else:
+        p["ffn"] = init_dense_ffn(k2, cfg.d_model, cfg.d_ff,
+                                  kind=cfg.ffn_kind, bias=cfg.ffn_bias, dtype=dtype)
+    return p
+
+
+def _block_fwd(p, x, aux, cfg: ArchConfig, moe_cfg, *, kind: str, vision=None, gqa=None):
+    """One transformer block; kind: self | self_moe | self_wide | cross."""
+    h = _norm(x, p["norm1"], cfg)
+    if kind == "cross":
+        a = cross_attend(p["attn"], h, vision, gqa)
+    elif cfg.attn_kind == "mla":
+        a = mla_attend(p["attn"], h, _mla_cfg(cfg))
+    else:
+        a = gqa_attend(p["attn"], h, gqa)
+    x = x + a
+    h = _norm(x, p["norm2"], cfg)
+    if kind == "self_moe":
+        y, al = moe_ffn(p["moe"], h, moe_cfg)
+        aux = aux + al
+    elif kind == "self_wide":
+        y = dense_ffn(p["ffn"], h, kind=cfg.ffn_kind)
+    else:
+        y = dense_ffn(p["ffn"], h, kind=cfg.ffn_kind)
+    out = x + y
+    if cfg.bwd_bf16_boundary:
+        out = bf16_boundary(out)          # bf16 TP backward collectives
+    if cfg.seq_shard:
+        from jax.sharding import PartitionSpec as P
+        out = jax.lax.with_sharding_constraint(
+            out, P(tuple(cfg.batch_axes), "model", None))  # Megatron-SP boundary
+    return out, aux
+
+
+def _block_decode(p, cache_l, x, pos, cfg: ArchConfig, moe_cfg, *, kind: str, gqa=None):
+    h = _norm(x, p["norm1"], cfg)
+    if kind == "cross":
+        # cross-attention at decode: attend over the cached vision K/V
+        a = _cross_decode(p["attn"], cache_l, h, gqa)
+        new_cache = cache_l
+    elif cfg.attn_kind == "mla":
+        new_cache, a = mla_decode(p["attn"], cache_l, h, _mla_cfg(cfg), pos)
+    else:
+        new_cache, a = gqa_decode(p["attn"], cache_l, h, gqa, pos)
+    x = x + a
+    h = _norm(x, p["norm2"], cfg)
+    if kind == "self_moe":
+        y, _ = moe_ffn(p["moe"], h, moe_cfg._replace(data_groups=1, impl="gather" if moe_cfg.impl == "ep" else moe_cfg.impl))
+    else:
+        y = dense_ffn(p["ffn"], h, kind=cfg.ffn_kind)
+    return new_cache, x + y
+
+
+def _cross_decode(p, cache: KVCache, x_t, gqa: GQAConfig):
+    """Decode-time cross-attention: K/V were cached at prefill (non-causal)."""
+    from repro.models.attention import naive_attention
+    B = x_t.shape[0]
+    q = jnp.einsum("btd,dhk->bthk", x_t, p["wq"])
+    if gqa.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    G = gqa.n_heads // gqa.n_kv_heads
+    qg = q.reshape(B, 1, gqa.n_kv_heads, G, gqa.head_dim)
+    out = naive_attention(qg, cache.k, cache.v, causal=False)
+    out = out.reshape(B, 1, gqa.n_heads, gqa.head_dim)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+def _stack_init(init_one: Callable, key, n: int):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _stack_len(stacked) -> int:
+    return int(jax.tree.leaves(stacked)[0].shape[0])
+
+
+def _scan(block, stacked, carry, remat: str, unroll: int = 1, full_unroll: bool = False):
+    """Outer layer scans keep unroll=1 (small HLO, fast compiles).  XLA cost
+    analysis counts a while body ONCE, so dry-run *probe* compiles set
+    ``full_unroll`` (cfg.scan_layers=False) to expose exact per-layer costs.
+    *Inner* scans of nested stacks (vlm/hybrid superblocks) are always fully
+    unrolled so the outer body's cost is exact per superblock."""
+
+    def body(c, lp):
+        return block(lp, c), None
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    if full_unroll:
+        unroll = _stack_len(stacked)
+    carry, _ = jax.lax.scan(body, carry, stacked, unroll=unroll)
+    return carry
+
+
+def _scan_cache(block, stacked, cache, x, unroll: int = 1, full_unroll: bool = False):
+    def body(c, inp):
+        lp, lc = inp
+        nc, y = block(lp, lc, c)
+        return y, nc
+
+    if full_unroll:
+        unroll = _stack_len(stacked)
+    x, new_cache = jax.lax.scan(body, x, (stacked, cache), unroll=unroll)
+    return new_cache, x
+
+
+# ---------------------------------------------------------------------------
+# decoder LM (dense / moe / vlm)
+# ---------------------------------------------------------------------------
+
+
+def build_decoder_lm(cfg: ArchConfig, data_groups: int = 1) -> Model:
+    dtype = _dtype(cfg)
+    gqa = _gqa_cfg(cfg)
+    moe_cfg = _moe_cfg(cfg, data_groups) if cfg.n_experts else None
+    V, D = cfg.vocab, cfg.d_model
+    is_vlm = cfg.family == "vlm"
+
+    # -- segment structure ---------------------------------------------------
+    if is_vlm:
+        period = cfg.cross_attn_period
+        n_super = cfg.n_layers // period
+        seg_plan = [("vlm_super", n_super)]
+    else:
+        n_dense = cfg.first_dense_layers if cfg.n_experts else cfg.n_layers
+        seg_plan = []
+        if n_dense:
+            kind = "self_wide" if (cfg.n_experts and cfg.d_ff_dense) else "self"
+            seg_plan.append((kind, n_dense))
+        if cfg.n_experts and cfg.n_layers - n_dense > 0:
+            seg_plan.append(("self_moe", cfg.n_layers - n_dense))
+
+    def init(rng):
+        keys = jax.random.split(rng, len(seg_plan) + 4)
+        params: dict[str, Any] = {
+            "embed": {"table": embed_init(keys[0], (V, D), dtype)},
+            "final_norm": _init_norm(cfg, dtype),
+            "head": {"w": dense_init(keys[1], (D, V), in_axis=0, dtype=dtype)},
+        }
+        segs = {}
+        for i, (kind, n) in enumerate(seg_plan):
+            k = keys[2 + i]
+            if kind == "vlm_super":
+                def init_super(kk):
+                    ka, kb = jax.random.split(kk)
+                    return {
+                        "self": _stack_init(
+                            lambda k2: _init_block(k2, cfg, ffn="dense", data_groups=data_groups, dtype=dtype),
+                            ka, cfg.cross_attn_period - 1),
+                        "cross": _init_block(kb, cfg, ffn="dense", data_groups=data_groups, dtype=dtype),
+                    }
+                segs[f"seg{i}"] = _stack_init(init_super, k, n)
+            else:
+                ffn = {"self": "dense", "self_wide": "dense_wide", "self_moe": "moe"}[kind]
+                segs[f"seg{i}"] = _stack_init(
+                    lambda k2: _init_block(k2, cfg, ffn=ffn, data_groups=data_groups, dtype=dtype), k, n)
+        params["segments"] = segs
+        if is_vlm and cfg.vision_dim and cfg.vision_dim != D:
+            params["vision_proj"] = {"w": dense_init(keys[-1], (cfg.vision_dim, D), in_axis=0, dtype=dtype)}
+        if cfg.mtp:
+            km = jax.random.split(keys[-2], 2)
+            params["mtp"] = {
+                "proj": dense_init(km[0], (2 * D, D), in_axis=0, dtype=dtype),
+                "block": _init_block(km[1], cfg, ffn="dense" if not cfg.n_experts else "dense_wide",
+                                     data_groups=data_groups, dtype=dtype),
+                "norm_h": _init_norm(cfg, dtype),
+                "norm_e": _init_norm(cfg, dtype),
+                "final_norm": _init_norm(cfg, dtype),
+            }
+        return params
+
+    def _vision_of(params, batch):
+        v = batch["vision_embeds"].astype(dtype)
+        if "vision_proj" in params:
+            v = v @ params["vision_proj"]["w"]
+        return v
+
+    def trunk(params, tokens, vision=None):
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+        aux = jnp.zeros((), jnp.float32)
+        for i, (kind, _n) in enumerate(seg_plan):
+            stacked = params["segments"][f"seg{i}"]
+            if kind == "vlm_super":
+                def super_fwd(sp, carry):
+                    def inner(p_l, c):
+                        return _block_fwd(p_l, c[0], c[1], cfg, moe_cfg, kind="self", gqa=gqa)
+                    carry = _scan(inner, sp["self"], carry, cfg.remat,
+                                  unroll=cfg.cross_attn_period - 1)
+                    x2, a2 = _block_fwd(sp["cross"], carry[0], carry[1], cfg, moe_cfg,
+                                        kind="cross", vision=vision, gqa=gqa)
+                    return (x2, a2)
+                x, aux = _scan(super_fwd, stacked, (x, aux), cfg.remat,
+                               full_unroll=not cfg.scan_layers)
+            else:
+                def blk(p_l, c, _kind=kind):
+                    return _block_fwd(p_l, c[0], c[1], cfg, moe_cfg, kind=_kind, gqa=gqa)
+                x, aux = _scan(blk, stacked, (x, aux), cfg.remat,
+                               full_unroll=not cfg.scan_layers)
+        return x, aux
+
+    def forward(params, batch):
+        vision = _vision_of(params, batch) if is_vlm else None
+        x, _ = trunk(params, batch["tokens"], vision)
+        x = _norm(x, params["final_norm"], cfg)
+        if cfg.prefill_last_only:
+            x = x[:, -1:]                 # serving: only next-token logits
+        return x @ params["head"]["w"]
+
+    def loss_fn(params, batch):
+        vision = _vision_of(params, batch) if is_vlm else None
+        h, aux = trunk(params, batch["tokens"], vision)
+        x = _norm(h, params["final_norm"], cfg)
+        if cfg.chunked_ce:
+            loss = chunked_softmax_cross_entropy(
+                x, params["head"]["w"], batch["labels"], chunk=cfg.ce_chunk,
+                z_loss=cfg.z_loss, full_unroll=not cfg.scan_layers)
+        else:
+            logits = x @ params["head"]["w"]
+            loss = softmax_cross_entropy(logits, batch["labels"], z_loss=cfg.z_loss)
+        metrics = {"ce": loss, "aux": aux}
+        if cfg.mtp:
+            m = params["mtp"]
+            emb_next = jnp.take(params["embed"]["table"], batch["labels"], axis=0)
+            hcat = jnp.concatenate([_norm(h, m["norm_h"], cfg), _norm(emb_next, m["norm_e"], cfg)], axis=-1)
+            hm = hcat @ m["proj"]
+            hm, _ = _block_fwd(m["block"], hm, jnp.zeros((), jnp.float32), cfg, moe_cfg,
+                               kind="self_wide" if cfg.n_experts else "self", gqa=gqa)
+            hm = _norm(hm, m["final_norm"], cfg)
+            mtp_logits = hm[:, :-1] @ params["head"]["w"]
+            mtp_loss = softmax_cross_entropy(mtp_logits, batch["labels"][:, 1:])
+            metrics["mtp"] = mtp_loss
+            loss = loss + cfg.mtp_weight * mtp_loss
+        return loss + aux, metrics
+
+    # -- decode ----------------------------------------------------------------
+
+    cache_dtype = jnp.bfloat16 if cfg.dtype != "float32" else jnp.float32
+
+    def init_cache(batch, max_len):
+        caches = {}
+        for i, (kind, n) in enumerate(seg_plan):
+            if kind == "vlm_super":
+                self_c = jax.vmap(lambda _: jax.vmap(lambda __: init_gqa_cache(gqa, batch, max_len, cache_dtype))(
+                    jnp.arange(cfg.cross_attn_period - 1)))(jnp.arange(n))
+                cross_c = jax.vmap(lambda _: init_gqa_cache(
+                    _gqa_cfg(cfg), batch, cfg.vision_tokens, cache_dtype))(jnp.arange(n))
+                caches[f"seg{i}"] = {"self": self_c, "cross": cross_c}
+            elif cfg.attn_kind == "mla":
+                caches[f"seg{i}"] = jax.vmap(lambda _: init_mla_cache(_mla_cfg(cfg), batch, max_len, cache_dtype))(jnp.arange(n))
+            else:
+                caches[f"seg{i}"] = jax.vmap(lambda _: init_gqa_cache(
+                    gqa, batch, max_len, cache_dtype,
+                    quantized=(cfg.kv_cache_dtype == "int8")))(jnp.arange(n))
+        return caches
+
+    def decode_step(params, cache, tokens, pos):
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+        new_caches = {}
+        for i, (kind, _n) in enumerate(seg_plan):
+            stacked = params["segments"][f"seg{i}"]
+            if kind == "vlm_super":
+                def super_dec(sp, scache, xx):
+                    def inner(p_l, c_l, cc):
+                        return _block_decode(p_l, c_l, cc, pos, cfg, moe_cfg, kind="self", gqa=gqa)
+                    new_self, xx = _scan_cache(inner, sp["self"], scache["self"], xx,
+                                               unroll=cfg.cross_attn_period - 1)
+                    xx2 = xx + _cross_decode(sp["cross"]["attn"], scache["cross"],
+                                             _norm(xx, sp["cross"]["norm1"], cfg), gqa)
+                    h2 = _norm(xx2, sp["cross"]["norm2"], cfg)
+                    xx2 = xx2 + dense_ffn(sp["cross"]["ffn"], h2, kind=cfg.ffn_kind)
+                    return {"self": new_self, "cross": scache["cross"]}, xx2
+
+                def body(c, inp):
+                    sp, sc = inp
+                    ncache, y = super_dec(sp, sc, c)
+                    return y, ncache
+
+                x, nc = jax.lax.scan(body, x, (stacked, cache[f"seg{i}"]),
+                                     unroll=_stack_len(stacked) if not cfg.scan_layers else 1)
+                new_caches[f"seg{i}"] = nc
+            else:
+                def blk(p_l, c_l, xx, _kind=kind):
+                    return _block_decode(p_l, c_l, xx, pos, cfg, moe_cfg, kind=_kind, gqa=gqa)
+                nc, x = _scan_cache(blk, stacked, cache[f"seg{i}"], x,
+                                    full_unroll=not cfg.scan_layers)
+                new_caches[f"seg{i}"] = nc
+        x = _norm(x, params["final_norm"], cfg)
+        return x @ params["head"]["w"], new_caches
+
+    return Model(cfg, init, loss_fn, forward, init_cache, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# SSM (mamba2) and hybrid (zamba2)
+# ---------------------------------------------------------------------------
+
+
+def build_ssm(cfg: ArchConfig, data_groups: int = 1) -> Model:
+    dtype = _dtype(cfg)
+    ssm = _ssm_cfg(cfg)
+    V, D = cfg.vocab, cfg.d_model
+    hybrid = cfg.family == "hybrid"
+    gqa = _gqa_cfg(cfg) if hybrid else None
+    period = cfg.hybrid_period if hybrid else 0
+    n_super = cfg.n_layers // period if hybrid else 0
+
+    def init_mamba_block(k):
+        return {"norm": _init_norm(cfg, dtype), "mamba": init_mamba2(k, ssm, dtype)}
+
+    def init(rng):
+        keys = jax.random.split(rng, 6)
+        params: dict[str, Any] = {
+            "embed": {"table": embed_init(keys[0], (V, D), dtype)},
+            "final_norm": _init_norm(cfg, dtype),
+            "head": {"w": dense_init(keys[1], (D, V), in_axis=0, dtype=dtype)},
+        }
+        if hybrid:
+            params["segments"] = {
+                "mamba": _stack_init(
+                    lambda kk: _stack_init(init_mamba_block, kk, period), keys[2], n_super)
+            }
+            params["shared_block"] = _init_block(keys[3], cfg, ffn="dense",
+                                                 data_groups=data_groups, dtype=dtype)
+        else:
+            params["segments"] = {"mamba": _stack_init(init_mamba_block, keys[2], cfg.n_layers)}
+        return params
+
+    def mamba_block(p_l, x):
+        return x + mamba2_forward(p_l["mamba"], _norm(x, p_l["norm"], cfg), ssm)
+
+    def trunk(params, tokens):
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+        if hybrid:
+            shared = params["shared_block"]
+
+            def super_fwd(sp, c):
+                def inner(cc, p_l):
+                    return mamba_block(p_l, cc), None
+                c, _ = jax.lax.scan(inner, c, sp, unroll=period)
+                c2, _ = _block_fwd(shared, c, jnp.zeros((), jnp.float32), cfg, None,
+                                   kind="self", gqa=gqa)
+                return c2
+            x = _scan(super_fwd, params["segments"]["mamba"], x, cfg.remat,
+                      full_unroll=not cfg.scan_layers)
+        else:
+            x = _scan(mamba_block, params["segments"]["mamba"], x, cfg.remat,
+                      full_unroll=not cfg.scan_layers)
+        return x
+
+    def forward(params, batch):
+        x = trunk(params, batch["tokens"])
+        return _norm(x, params["final_norm"], cfg) @ params["head"]["w"]
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch)
+        loss = softmax_cross_entropy(logits, batch["labels"], z_loss=cfg.z_loss)
+        return loss, {"ce": loss}
+
+    cache_dtype = jnp.bfloat16 if cfg.dtype != "float32" else jnp.float32
+
+    def init_cache(batch, max_len):
+        if hybrid:
+            mcache = jax.vmap(lambda _: jax.vmap(lambda __: init_mamba_cache(ssm, batch, dtype))(
+                jnp.arange(period)))(jnp.arange(n_super))
+            acache = jax.vmap(lambda _: init_gqa_cache(gqa, batch, max_len, cache_dtype))(jnp.arange(n_super))
+            return {"mamba": mcache, "attn": acache}
+        return {"mamba": jax.vmap(lambda _: init_mamba_cache(ssm, batch, dtype))(jnp.arange(cfg.n_layers))}
+
+    def decode_step(params, cache, tokens, pos):
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+
+        def mamba_dec(p_l, c_l, xx):
+            nc, y = mamba2_decode(p_l["mamba"], c_l, _norm(xx, p_l["norm"], cfg), ssm)
+            return nc, xx + y
+
+        if hybrid:
+            shared = params["shared_block"]
+
+            def body(c, inp):
+                sp, mcache, acache = inp
+                new_m, y = _scan_cache(mamba_dec, sp, mcache, c, unroll=period)
+                new_a, y = _block_decode(shared, acache, y, pos, cfg, None, kind="self", gqa=gqa)
+                return y, (new_m, new_a)
+
+            x, (new_m, new_a) = jax.lax.scan(
+                body, x, (params["segments"]["mamba"], cache["mamba"], cache["attn"]),
+                unroll=_stack_len(cache["attn"]) if not cfg.scan_layers else 1)
+            new_cache = {"mamba": new_m, "attn": new_a}
+        else:
+            new_m, x = _scan_cache(mamba_dec, params["segments"]["mamba"], cache["mamba"], x,
+                                   full_unroll=not cfg.scan_layers)
+            new_cache = {"mamba": new_m}
+        x = _norm(x, params["final_norm"], cfg)
+        return x @ params["head"]["w"], new_cache
+
+    return Model(cfg, init, loss_fn, forward, init_cache, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# audio encoder (hubert)
+# ---------------------------------------------------------------------------
+
+
+def build_audio_encoder(cfg: ArchConfig, data_groups: int = 1) -> Model:
+    dtype = _dtype(cfg)
+    gqa = _gqa_cfg(cfg, causal=False)
+    D = cfg.d_model
+
+    def init(rng):
+        keys = jax.random.split(rng, 4)
+        return {
+            "in_proj": {"w": dense_init(keys[0], (cfg.frame_dim, D), in_axis=0, dtype=dtype)},
+            "segments": {"seg0": _stack_init(
+                lambda k: _init_block(k, cfg, ffn="dense", data_groups=data_groups, dtype=dtype),
+                keys[1], cfg.n_layers)},
+            "final_norm": _init_norm(cfg, dtype),
+            "head": {"w": dense_init(keys[2], (D, cfg.vocab), in_axis=0, dtype=dtype)},
+        }
+
+    def forward(params, batch):
+        x = batch["frames"].astype(dtype) @ params["in_proj"]["w"]
+
+        def blk(p_l, c):
+            return _block_fwd(p_l, c[0], c[1], cfg, None, kind="self", gqa=gqa)
+
+        x, _ = _scan(blk, params["segments"]["seg0"], (x, jnp.zeros((), jnp.float32)), cfg.remat,
+                     full_unroll=not cfg.scan_layers)
+        x = _norm(x, params["final_norm"], cfg)
+        return x @ params["head"]["w"]
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch)
+        loss = softmax_cross_entropy(logits, batch["labels"])
+        return loss, {"ce": loss}
+
+    return Model(cfg, init, loss_fn, forward, None, None)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ArchConfig, data_groups: int = 1) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return build_decoder_lm(cfg, data_groups)
+    if cfg.family in ("ssm", "hybrid"):
+        return build_ssm(cfg, data_groups)
+    if cfg.family == "audio":
+        return build_audio_encoder(cfg, data_groups)
+    raise ValueError(f"unknown family {cfg.family}")

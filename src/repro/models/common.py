@@ -1,0 +1,210 @@
+"""Shared model building blocks: norms, RoPE, embeddings, init, scan-over-layers.
+
+Models are plain init/apply function pairs over dict pytrees (no framework
+dependency); leaf *names* are the contract the sharding rules in
+``launch/shardings.py`` pattern-match on.  Layer stacks carry a leading layer
+dimension and are executed with ``jax.lax.scan`` (small HLO, fast compiles,
+remat-friendly) — the MaxText-style production layout.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# -- initialisation ------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32):
+    """Truncated-normal fan-in init (≈ variance_scaling(1.0))."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# -- norms ----------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# -- rotary embeddings -----------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Half-rotation RoPE.  x: (..., T, H, D); positions: (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., T, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- losses -----------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, *, z_loss: float = 0.0):
+    """Mean next-token CE with optional z-loss; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)
+
+
+# -- scan over layers ---------------------------------------------------------------
+
+
+def stack_layers(init_one: Callable, key, n_layers: int):
+    """Initialise a stacked layer pytree: every leaf gets a leading L dim."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def scan_blocks(block_fn: Callable, stacked_params, x, *, remat: str = "none",
+                unroll: int = 1):
+    """x -> block_fn(params_l, x) for l in layers, via lax.scan.
+
+    remat: "none" | "full" (checkpoint each layer — the standard memory/compute
+    trade for training long sequences).
+    """
+
+    def body(carry, layer_params):
+        return block_fn(layer_params, carry), None
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    out, _ = jax.lax.scan(body, x, stacked_params, unroll=unroll)
+    return out
+
+
+def scan_blocks_with_cache(block_fn: Callable, stacked_params, cache, x):
+    """Decode-path scan: block_fn(params_l, cache_l, x) -> (new_cache_l, x).
+
+    cache is stacked with a leading layer dim; the updated stack is returned.
+    """
+
+    def body(carry, inp):
+        layer_params, layer_cache = inp
+        new_cache, y = block_fn(layer_params, layer_cache, carry)
+        return y, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (stacked_params, cache))
+    return new_cache, x
+
+
+def abstract_init(init_fn: Callable, *args):
+    """Shape-only init: returns ShapeDtypeStructs, zero FLOPs, zero memory."""
+    return jax.eval_shape(init_fn, *args)
+
+
+# -- §Perf levers ----------------------------------------------------------------
+
+
+@jax.custom_vjp
+def bf16_boundary(x):
+    """Identity forward; casts the cotangent to bf16 in backward.
+
+    Placed at residual-stream block boundaries it forces the TP backward
+    all-reduces (which XLA otherwise runs on the fp32 cotangents produced by
+    the fp32-internal norms/softmax) down to bf16 — halving backward
+    collective bytes at the cost of bf16 gradient precision across blocks.
+    """
+    return x
+
+
+def _bf16_boundary_fwd(x):
+    return x, None
+
+
+def _bf16_boundary_bwd(_res, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+bf16_boundary.defvjp(_bf16_boundary_fwd, _bf16_boundary_bwd)
+
+
+def chunked_softmax_cross_entropy(hidden, head_w, labels, *, chunk: int = 8192,
+                                  z_loss: float = 0.0, full_unroll: bool = False):
+    """Streaming CE: never materialises the (B,T,V) logits.
+
+    Scans vocab chunks of the head matmul, carrying the running max /
+    log-sum-exp and the label logit — O(B·T·chunk) live memory instead of
+    O(B·T·V) fp32.  hidden (B,T,D) bf16, head_w (D,V).
+    """
+    B, T, D = hidden.shape
+    V = head_w.shape[-1]
+    nchunks = (V + chunk - 1) // chunk
+    pad = nchunks * chunk - V
+    wp = jnp.pad(head_w, ((0, 0), (0, pad)))
+    wc = wp.reshape(D, nchunks, chunk).transpose(1, 0, 2)          # (nc, D, chunk)
+
+    hf = hidden
+    lab = labels
+
+    def body(carry, inp):
+        m, lse_acc, label_logit = carry
+        ci, w = inp
+        logits = (hf @ w).astype(jnp.float32)                       # (B,T,chunk)
+        base = ci * chunk
+        vpos = base + jnp.arange(chunk)
+        logits = jnp.where((vpos < V)[None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        lse_acc = lse_acc * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1)
+        in_chunk = jnp.logical_and(lab >= base, lab < base + chunk)
+        local = jnp.clip(lab - base, 0, chunk - 1)
+        picked = jnp.take_along_axis(logits, local[..., None], axis=-1)[..., 0]
+        label_logit = jnp.where(in_chunk, picked, label_logit)
+        return (m_new, lse_acc, label_logit), None
+
+    m0 = jnp.full((B, T), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, T), jnp.float32)
+    g0 = jnp.zeros((B, T), jnp.float32)
+    (m, lse_acc, label_logit), _ = jax.lax.scan(
+        body, (m0, l0, g0), (jnp.arange(nchunks), wc),
+        unroll=nchunks if full_unroll else 1)
+    lse = m + jnp.log(jnp.maximum(lse_acc, 1e-30))
+    loss = lse - label_logit
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

@@ -1,0 +1,278 @@
+"""Feed-forward layers: dense (SwiGLU / GELU) and Mixture-of-Experts.
+
+MoE provides two dispatch implementations:
+
+* ``dense``  — every expert computes every token, combined by gate weight.
+  O(E) FLOPs; only for tiny smoke configs and as the correctness oracle.
+* ``gather`` — production path: per-data-group argsort routing into capacity-
+  bounded per-expert buffers ``(G, E, C, D)``, batched expert GEMMs, scatter
+  back.  Sorting happens *within* each data-parallel group (batched sort along
+  the local axis), so no global sort network appears in the SPMD lowering, and
+  the buffer is sharded over both the data axis (G) and the expert axis (E) —
+  the buffer re-shard between the data-local scatter and the expert-sharded
+  GEMM is exactly the EP dispatch all-to-all.
+
+Routing: softmax router, top-k with renormalised gates (DeepSeek-style),
+capacity factor with token dropping, and the standard load-balancing aux loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+
+
+def init_dense_ffn(key, d_model: int, d_ff: int, *, kind: str = "swiglu",
+                   bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        p = {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), in_axis=0, dtype=dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), in_axis=0, dtype=dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), in_axis=0, dtype=dtype),
+        }
+    else:  # gelu MLP (starcoder2 / hubert)
+        p = {
+            "w_in": dense_init(ks[0], (d_model, d_ff), in_axis=0, dtype=dtype),
+            "w_out": dense_init(ks[1], (d_ff, d_model), in_axis=0, dtype=dtype),
+        }
+        if bias:
+            p["b_in"] = jnp.zeros((d_ff,), dtype)
+            p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def dense_ffn(p, x, *, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = x @ p["w_in"]
+    if "b_in" in p:
+        h = h + p["b_in"]
+    h = jax.nn.gelu(h)
+    out = h @ p["w_out"]
+    if "b_out" in p:
+        out = out + p["b_out"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+class MoEConfig(NamedTuple):
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0            # always-on shared experts (deepseek)
+    capacity_factor: float = 1.25
+    impl: str = "gather"         # gather | dense
+    aux_loss_weight: float = 0.01
+    data_groups: int = 1         # data-parallel groups for group-local routing
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.float32):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), in_axis=0, dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (E, D, F), in_axis=1, dtype=dtype),
+        "w_up": dense_init(ks[2], (E, D, F), in_axis=1, dtype=dtype),
+        "w_down": dense_init(ks[3], (E, F, D), in_axis=1, dtype=dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = init_dense_ffn(ks[4], D, F * cfg.n_shared, kind="swiglu", dtype=dtype)
+    return p
+
+
+def _router(p, x2d, cfg: MoEConfig):
+    """x2d (T, D) -> (gates (T,k), idx (T,k), aux_loss scalar)."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux loss: E * sum_e f_e * P_e
+    T = x2d.shape[0]
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    ce = jnp.zeros((cfg.n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * cfg.top_k)
+    aux = cfg.n_experts * jnp.sum(me * ce) * cfg.aux_loss_weight
+    return gates, idx, aux
+
+
+def _moe_dense(p, x2d, gates, idx, cfg: MoEConfig):
+    """Oracle: all experts on all tokens, gather the chosen ones."""
+    h = jnp.einsum("td,edf->tef", x2d, p["w_gate"])
+    u = jnp.einsum("td,edf->tef", x2d, p["w_up"])
+    eo = jnp.einsum("tef,efd->ted", jax.nn.silu(h) * u, p["w_down"])  # (T,E,D)
+    sel = jnp.take_along_axis(eo, idx[:, :, None], axis=1)            # (T,k,D)
+    return jnp.sum(sel * gates[:, :, None].astype(sel.dtype), axis=1)
+
+
+def _moe_gather(p, x2d, gates, idx, cfg: MoEConfig):
+    """Production dispatch: group-local sort → (G,E,C,D) buffers → batched GEMM."""
+    T, D = x2d.shape
+    E, k, G = cfg.n_experts, cfg.top_k, max(1, cfg.data_groups)
+    Tg = T // G
+    C = max(1, int(math.ceil(k * Tg / E * cfg.capacity_factor)))
+
+    xg = x2d.reshape(G, Tg, D)
+    eid = idx.reshape(G, Tg * k)                                    # expert of each slot
+    gat = gates.reshape(G, Tg * k)
+
+    order = jnp.argsort(eid, axis=-1)                               # group-local sort
+    eid_s = jnp.take_along_axis(eid, order, axis=-1)
+    tok_s = order // k                                              # source token per slot
+    # position of each sorted slot within its expert
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(eid)     # (G,E)
+    offs = jnp.cumsum(counts, axis=-1) - counts                     # (G,E)
+    pos = jnp.arange(Tg * k)[None, :] - jnp.take_along_axis(offs, eid_s, axis=-1)
+    keep = pos < C
+    pos_c = jnp.clip(pos, 0, C - 1)
+
+    gather_tok = jnp.take_along_axis(xg, tok_s[:, :, None], axis=1)  # (G, Tg*k, D)
+    gather_tok = jnp.where(keep[:, :, None], gather_tok, 0)
+    buf = jnp.zeros((G, E, C, D), x2d.dtype)
+    gi = jnp.broadcast_to(jnp.arange(G)[:, None], (G, Tg * k))
+    buf = buf.at[gi, eid_s, pos_c].add(gather_tok)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    out_buf = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u, p["w_down"])
+
+    out_slots = out_buf[gi, eid_s, pos_c]                            # (G, Tg*k, D)
+    out_slots = jnp.where(keep[:, :, None], out_slots, 0)
+    gat_s = jnp.take_along_axis(gat, order, axis=-1)
+    out_slots = out_slots * gat_s[:, :, None].astype(out_slots.dtype)
+    y = jnp.zeros((G, Tg, D), x2d.dtype).at[gi, tok_s].add(out_slots)
+    return y.reshape(T, D)
+
+
+def moe_ffn(p, x, cfg: MoEConfig):
+    """x (B, T, D) -> (y, aux_loss)."""
+    B, T, D = x.shape
+    x2d = x.reshape(B * T, D)
+    if cfg.impl == "ep":
+        y, aux = _moe_ep(p, x2d, cfg)
+        if cfg.n_shared:
+            y = y + dense_ffn(p["shared"], x2d, kind="swiglu")
+        return y.reshape(B, T, D), aux
+    gates, idx, aux = _router(p, x2d, cfg)
+    if cfg.impl == "dense":
+        y = _moe_dense(p, x2d, gates, idx, cfg)
+    else:
+        y = _moe_gather(p, x2d, gates, idx, cfg)
+    if cfg.n_shared:
+        y = y + dense_ffn(p["shared"], x2d, kind="swiglu")
+    return y.reshape(B, T, D), aux
+
+
+# ---------------------------------------------------------------------------
+# EP dispatch: shard_map all-to-all (DeepSeek-style expert parallelism)
+# ---------------------------------------------------------------------------
+
+
+def _moe_ep_local(p_router, w_gate, w_up, w_down, x_m, cfg: MoEConfig, ep_axis: str):
+    """Per-device body (inside shard_map): x_m (chunk, D) are THIS device's
+    tokens (the model-axis slice); expert weights are this device's E_loc
+    experts.  Dispatch = all_to_all of capacity-padded per-expert buffers.
+    """
+    M = jax.lax.axis_size(ep_axis)
+    chunk, D = x_m.shape
+    E = cfg.n_experts
+    E_loc = E // M
+    k = cfg.top_k
+    C = max(1, int(math.ceil(k * chunk / E * cfg.capacity_factor)))
+
+    logits = (x_m.astype(jnp.float32) @ p_router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # --- local capacity-padded buffers, one slot group per GLOBAL expert ----
+    eid = idx.reshape(-1)                                     # (chunk·k,)
+    gat = gates.reshape(-1)
+    order = jnp.argsort(eid)
+    eid_s = eid[order]
+    tok_s = order // k
+    counts = jnp.bincount(eid, length=E)
+    offs = jnp.cumsum(counts) - counts
+    pos = jnp.arange(chunk * k) - offs[eid_s]
+    keep = pos < C
+    pos_c = jnp.clip(pos, 0, C - 1)
+    sent = jnp.where(keep[:, None], x_m[tok_s], 0)
+    buf = jnp.zeros((E, C, D), x_m.dtype).at[eid_s, pos_c].add(sent)
+
+    # --- dispatch: (M, E_loc, C, D) all_to_all over the expert axis ----------
+    buf = buf.reshape(M, E_loc, C, D)
+    recv = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=False)                    # (M, E_loc, C, D)
+    toks = recv.reshape(M * E_loc * C, D) if False else recv
+
+    # --- expert GEMMs on my E_loc experts (batch dim = source device × C) ----
+    te = toks.transpose(1, 0, 2, 3).reshape(E_loc, M * C, D)  # (E_loc, MC, D)
+    h = jnp.einsum("ecd,edf->ecf", te, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", te, w_up)
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, w_down)
+    out = out.reshape(E_loc, M, C, D).transpose(1, 0, 2, 3)   # (M, E_loc, C, D)
+
+    # --- return trip + combine ------------------------------------------------
+    back = jax.lax.all_to_all(out, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=False).reshape(E, C, D)
+    slots = back[eid_s, pos_c]
+    slots = jnp.where(keep[:, None], slots, 0) * gat[order][:, None].astype(back.dtype)
+    y_m = jnp.zeros((chunk, D), x_m.dtype).at[tok_s].add(slots)
+
+    # load-balance aux (local estimate; mean over devices happens via out spec)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[eid].add(1.0) / (chunk * k)
+    aux = cfg.n_experts * jnp.sum(me * ce) * cfg.aux_loss_weight
+    return y_m, aux
+
+
+def _moe_ep(p, x2d, cfg: MoEConfig):
+    """Global entry: shard_map over (data, model); tokens data-sharded and
+    model-replicated on entry; each model rank takes its token slice, routes,
+    and exchanges with the expert owners via all_to_all.  Requires the ambient
+    mesh registered by launch.shardings.set_mesh_axis_sizes."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch import shardings as sh
+
+    mesh = sh.CURRENT_MESH
+    if mesh is None:
+        raise RuntimeError("moe_impl='ep' needs a mesh (launch/steps.build_cell)")
+    ep_axis = "model"
+    dp = tuple(a for a in mesh.axis_names if a != ep_axis)
+    M = int(mesh.shape[ep_axis])
+    T, D = x2d.shape
+
+    def body(p_router, w_gate, w_up, w_down, x_loc):
+        m = jax.lax.axis_index(ep_axis)
+        chunk = x_loc.shape[0] // M
+        x_m = jax.lax.dynamic_slice_in_dim(x_loc, m * chunk, chunk)
+        y_m, aux = _moe_ep_local(p_router, w_gate, w_up, w_down, x_m, cfg, ep_axis)
+        # republish the full token set on every model rank
+        y_loc = jax.lax.all_gather(y_m, ep_axis, axis=0, tiled=True)
+        aux = jax.lax.pmean(aux, ep_axis)
+        return y_loc, aux[None]
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(ep_axis, None, None), P(ep_axis, None, None),
+                  P(ep_axis, None, None), P(dp, None)),
+        out_specs=(P(dp, None), P(dp)),
+        check_vma=False,
+    )(p["router"], p["w_gate"], p["w_up"], p["w_down"], x2d)
+    return y, jnp.mean(aux)

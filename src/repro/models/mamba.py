@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked for TPU.
+
+The SSD algorithm splits the sequence into chunks of Q tokens: within a chunk
+the token-token interaction is a (masked, decay-weighted) quadratic form that
+maps onto the MXU; across chunks only the (H, N, P) state is carried by a
+linear recurrence — O(T·Q) work, O(T/Q) sequential steps.  This is the
+TPU-native adaptation of the paper-pool's GPU scan: the chunk GEMMs feed the
+systolic array, the state recurrence is a tiny lax.scan.
+``kernels/ssd_scan`` implements the same schedule as a Pallas kernel with the
+state carried in VMEM scratch across the (sequential) chunk grid axis.
+
+Decode carries (conv_state, ssm_state) — O(1) memory and compute per token in
+context length, which is why the ``long_500k`` cells run for ssm/hybrid archs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_state: int = 128          # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    n_groups: int = 1           # G (B/C shared per group)
+    conv_kernel: int = 4
+    chunk: int = 128            # Q
+    ssd_impl: str = "chunked"   # chunked | pallas
+    full_unroll: bool = False   # unroll the inter-chunk scan (dry-run flop probes)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(key, cfg: SSMConfig, dtype=jnp.float32):
+    D, DI, H, G, N, K = (cfg.d_model, cfg.d_inner, cfg.n_heads,
+                         cfg.n_groups, cfg.d_state, cfg.conv_kernel)
+    ks = jax.random.split(key, 5)
+    d_proj = 2 * DI + 2 * G * N + H      # [z, x, B, C, dt]
+    return {
+        "in_proj": dense_init(ks[0], (D, d_proj), in_axis=0, dtype=dtype),
+        "conv_w": dense_init(ks[1], (K, DI + 2 * G * N), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((DI + 2 * G * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((DI,), dtype),
+        "out_proj": dense_init(ks[2], (DI, D), in_axis=0, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d; x (B, T, C), w (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, full_unroll: bool = False):
+    """SSD reference: x (b,T,H,P), dt (b,T,H), A (H,), B/C (b,T,G,N) → y, final state.
+
+    Pure-jnp chunked algorithm (oracle for the Pallas kernel).
+    """
+    b, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = chunk
+    nc = T // Q
+    rep = H // G
+
+    # expand groups to heads
+    Bh = jnp.repeat(B, rep, axis=2)            # (b,T,H,N)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    a = (dt * (-jnp.exp(A))[None, None, :]).astype(jnp.float32)   # log-decay (<0)
+    xbar = x * dt[..., None].astype(x.dtype)
+
+    def r(t, shape):  # reshape helper to chunks
+        return t.reshape((b, nc, Q) + shape)
+
+    xc, ac = r(xbar, (H, P)), r(a, (H,))
+    Bc, Cc = r(Bh, (H, N)), r(Ch, (H, N))
+
+    cum = jnp.cumsum(ac, axis=2)                                   # (b,nc,Q,H)
+    # -- intra-chunk (quadratic within chunk, MXU-friendly) --------------------
+    li = cum[:, :, :, None, :]                                     # i
+    lj = cum[:, :, None, :, :]                                     # j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: the upper triangle has li - lj > 0 and would overflow
+    decay = jnp.exp(jnp.where(mask, li - lj, -jnp.inf))            # (b,nc,Q,Q,H)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    scores = scores * decay
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc.astype(jnp.float32))
+
+    # -- chunk states -----------------------------------------------------------
+    last = cum[:, :, -1:, :]                                        # (b,nc,1,H)
+    sdecay = jnp.exp(last - cum)                                    # decay j→chunk end
+    S = jnp.einsum("bcjhn,bcjhp->bchnp",
+                   (Bc.astype(jnp.float32) * sdecay[..., None]), xc.astype(jnp.float32))
+
+    # -- inter-chunk recurrence ---------------------------------------------------
+    total = jnp.exp(last[:, :, 0, :])                               # (b,nc,H)
+
+    def body(h, inp):
+        S_c, tot = inp                                              # (b,H,N,P), (b,H)
+        h_new = h * tot[:, :, None, None] + S_c
+        return h_new, h                                             # emit state *before* chunk
+
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    hT, h_prev = jax.lax.scan(body, h0,
+                              (S.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+                              unroll=nc if full_unroll else 1)
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                        # (b,nc,H,N,P)
+
+    y_off = jnp.einsum("bcihn,bchnp->bcihp",
+                       (Cc.astype(jnp.float32) * jnp.exp(cum)[..., None]), h_prev)
+    y = (y_diag + y_off).reshape(b, T, H, P).astype(x.dtype)
+    return y, hT
+
+
+def mamba2_forward(p, x, cfg: SSMConfig):
+    """Train/prefill pass. x (B, T, D) → (B, T, D)."""
+    B_, T, D = x.shape
+    DI, H, G, N, P = cfg.d_inner, cfg.n_heads, cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    proj = x @ p["in_proj"]
+    # split: [z (DI), xBC (DI+2GN), dt (H)]
+    z = proj[..., :DI]
+    xbc = proj[..., DI : 2 * DI + 2 * G * N]
+    dt = proj[..., 2 * DI + 2 * G * N :]
+
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :DI].reshape(B_, T, H, P)
+    Bmat = xbc[..., DI : DI + G * N].reshape(B_, T, G, N)
+    Cmat = xbc[..., DI + G * N :].reshape(B_, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    if cfg.ssd_impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, _ = ssd_ops.ssd(xs, dt, p["A_log"], Bmat, Cmat, chunk=cfg.chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, p["A_log"], Bmat, Cmat, chunk=cfg.chunk,
+                           full_unroll=cfg.full_unroll)
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B_, T, DI)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"]
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # (B, K-1, DI + 2GN) — last inputs to the causal conv
+    ssm: jax.Array   # (B, H, N, P) — the recurrent state
+
+
+def init_mamba_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    DI, H, G, N, P = cfg.d_inner, cfg.n_heads, cfg.n_groups, cfg.d_state, cfg.head_dim
+    return MambaCache(
+        jnp.zeros((batch, cfg.conv_kernel - 1, DI + 2 * G * N), dtype),
+        jnp.zeros((batch, H, N, P), jnp.float32),
+    )
+
+
+def mamba2_decode(p, cache: MambaCache, x_t, cfg: SSMConfig):
+    """One-token decode: O(1) in context length. x_t (B, 1, D)."""
+    B_ = x_t.shape[0]
+    DI, H, G, N, P = cfg.d_inner, cfg.n_heads, cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    proj = (x_t @ p["in_proj"])[:, 0]                                # (B, d_proj)
+    z = proj[..., :DI]
+    xbc_t = proj[..., DI : 2 * DI + 2 * G * N]
+    dt = proj[..., 2 * DI + 2 * G * N :]
+
+    # conv over [state, new]
+    window = jnp.concatenate([cache.conv, xbc_t[:, None, :]], axis=1)  # (B, K, C)
+    conv_out = jnp.sum(window * p["conv_w"][None], axis=1) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+
+    xs = xbc[..., :DI].reshape(B_, H, P)
+    Bmat = xbc[..., DI : DI + G * N].reshape(B_, G, N)
+    Cmat = xbc[..., DI + G * N :].reshape(B_, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B, H)
+
+    rep = H // G
+    Bh = jnp.repeat(Bmat, rep, axis=1)                               # (B,H,N)
+    Ch = jnp.repeat(Cmat, rep, axis=1)
+    decay = jnp.exp(dt * (-jnp.exp(p["A_log"]))[None, :])            # (B,H)
+    dBx = jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32),
+                     (xs * dt[..., None].astype(xs.dtype)).astype(jnp.float32))
+    new_ssm = cache.ssm * decay[:, :, None, None] + dBx
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), new_ssm)
+    y = y.astype(x_t.dtype) + xs * p["D"][None, :, None].astype(xs.dtype)
+    y = y.reshape(B_, 1, DI)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), p["norm"])
+    return MambaCache(new_conv, new_ssm), y @ p["out_proj"]

@@ -1,0 +1,20 @@
+from repro.optim.compression import EFState, compressed_accumulate, compression_ratio, ef_init
+from repro.optim.optimizers import (
+    AdamState,
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    sgd,
+    warmup_cosine,
+)
+from repro.optim.zero import Zero1State, zero1_gather_params, zero1_init, zero1_update
+
+__all__ = [
+    "EFState", "compressed_accumulate", "compression_ratio", "ef_init",
+    "AdamState", "Optimizer", "adam", "adamw", "apply_updates",
+    "clip_by_global_norm", "global_norm", "sgd", "warmup_cosine",
+    "Zero1State", "zero1_gather_params", "zero1_init", "zero1_update",
+]

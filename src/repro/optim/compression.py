@@ -1,0 +1,52 @@
+"""Gradient compression — the accumulator's sparse/auto modes for training.
+
+STEP §5.2 transfers sparse vectors as (index, value) pairs when beneficial.
+For gradients (dense but compressible) the production analogue is top-k
+sparsification with **error feedback** (the residual is carried to the next
+step so the update remains unbiased in the limit), wrapped around the
+accumulator.  ``auto`` keeps the paper's rule — compress only when the wire
+cost of pairs beats the dense vector.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accumulator import AccumMode, accumulate
+from repro.core.sparse import blocked_topk_sparsify, densify
+
+
+class EFState(NamedTuple):
+    """Error-feedback residual, same structure as the (packed) gradient."""
+
+    residual: jax.Array
+
+
+def ef_init(flat_len: int) -> EFState:
+    return EFState(jnp.zeros((flat_len,), jnp.float32))
+
+
+def compressed_accumulate(flat_grad: jax.Array, ef: EFState, axis, k: int,
+                          mode: AccumMode | str = AccumMode.SPARSE):
+    """Top-k + error feedback around the accumulator.
+
+    Returns (global_sum_of_compressed, new_ef).  Inside shard_map.
+    """
+    mode = AccumMode(mode)
+    corrected = flat_grad.astype(jnp.float32) + ef.residual
+    idx, vals = blocked_topk_sparsify(corrected, k)
+    sent = densify(idx, vals, corrected.shape[0])
+    new_residual = corrected - sent
+    if mode == AccumMode.SPARSE:
+        total = accumulate(sent, axis, AccumMode.SPARSE, k=k)
+    else:
+        total = accumulate(sent, axis, mode, k=k)
+    return total, EFState(new_residual)
+
+
+def compression_ratio(flat_len: int, k: int) -> float:
+    """Wire-bytes ratio of the pairs representation vs dense (paper's rule)."""
+    return (2.0 * k) / float(flat_len)

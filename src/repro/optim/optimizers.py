@@ -1,0 +1,129 @@
+"""Optimizers built in JAX (no external deps): SGD / momentum / Adam / AdamW.
+
+Functional protocol:
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+All states are pytrees, so they shard/checkpoint/reshard like params — which
+is what lets the ZeRO-1 layer (optim/zero.py) treat "optimizer state shard i
+lives with chunk-owner i" exactly as the paper's accumulator assigns chunk i
+to node i.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+LR = Union[float, Schedule]
+
+
+def _lr_at(lr: LR, step) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+    name: str = "optimizer"
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)) if u is not None else p, params, updates)
+
+
+# -- SGD / momentum -----------------------------------------------------------
+
+
+def sgd(lr: LR = 1e-2, momentum: Optional[float] = None, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum is None:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params=None, step=0):
+        lr_t = _lr_at(lr, step)
+        if momentum is None:
+            return jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads), state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr_t * (momentum * m + g.astype(jnp.float32)), new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr_t * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update, "sgd")
+
+
+# -- Adam / AdamW ---------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+
+
+def adam(lr: LR = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, name: str = "adam") -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jax.tree.map(zeros, params), jax.tree.map(zeros, params))
+
+    def update(grads, state: AdamState, params=None, step=0):
+        step = jnp.asarray(step, jnp.int32) + 1
+        lr_t = _lr_at(lr, step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(mu, nu)
+
+    return Optimizer(init, update, name)
+
+
+def adamw(lr: LR = 1e-3, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay, name="adamw")
+
+
+# -- schedules -------------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        frac = jnp.clip((step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0, 1)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,18 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_flatten_with_paths,
+    tree_zeros_like,
+    path_str,
+)
+from repro.utils.hlo import collective_bytes_from_hlo, CollectiveStats
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_flatten_with_paths",
+    "tree_zeros_like",
+    "path_str",
+    "collective_bytes_from_hlo",
+    "CollectiveStats",
+]

@@ -1,0 +1,73 @@
+"""Pytree utilities shared across the framework."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def path_str(path) -> str:
+    """Render a jax tree path as a dotted string, e.g. ``params.layers.wq``."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - defensive
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def tree_flatten_with_paths(tree: Any):
+    """Return ``[(path_str, leaf), ...]`` in deterministic order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(path), leaf) for path, leaf in flat]
+
+
+def _leaf_size(x) -> int:
+    if hasattr(x, "size"):
+        return int(x.size)
+    return 1
+
+
+def _leaf_bytes(x) -> int:
+    if hasattr(x, "size") and hasattr(x, "dtype"):
+        return int(x.size) * jnp.dtype(x.dtype).itemsize
+    return 0
+
+
+def tree_count(tree: Any) -> int:
+    """Total number of scalar elements across all leaves (param count)."""
+    return sum(_leaf_size(l) for l in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (works on ShapeDtypeStruct too)."""
+    return sum(_leaf_bytes(l) for l in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree: Any):
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), tree)
+
+
+def tree_allclose(a: Any, b: Any, rtol=1e-5, atol=1e-5) -> bool:
+    oks = jax.tree.map(
+        lambda x, y: bool(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)),
+        a,
+        b,
+    )
+    return all(jax.tree.leaves(oks))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} PiB"

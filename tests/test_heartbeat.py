@@ -1,0 +1,37 @@
+"""Heartbeat failure detector (paper §5.4)."""
+
+import time
+
+from repro.ft import HeartbeatMonitor
+
+
+def test_detects_silent_node():
+    dead = []
+    mon = HeartbeatMonitor([0, 1], timeout=0.15, check_interval=0.02,
+                           on_failure=lambda d: dead.extend(d))
+    mon.start()
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < 0.4:
+        mon.beat(0)   # node 1 never beats
+        time.sleep(0.02)
+    mon.stop()
+    assert dead == [1]
+    assert mon.dead_nodes() == [1]
+
+
+def test_pause_resume_virtual_barrier():
+    mon = HeartbeatMonitor([0], timeout=10)
+    assert not mon.should_pause()
+    mon.pause()
+    assert mon.should_pause()
+    mon.resume()
+    assert not mon.should_pause()
+
+
+def test_declare_and_revive():
+    dead = []
+    mon = HeartbeatMonitor([0, 1], timeout=10, on_failure=lambda d: dead.extend(d))
+    mon.declare_dead(0)
+    assert dead == [0]
+    mon.revive(0)
+    assert mon.dead_nodes() == []

@@ -1,0 +1,40 @@
+"""Collective-traffic HLO parser."""
+
+from repro.utils.hlo import collective_bytes_from_hlo
+
+
+HLO = """
+HloModule test
+%all-reduce.216 = f32[4,512,2048]{2,1,0} all-reduce(%fusion.5), channel_id=1, replica_groups=[8,8]<=[64], use_global_device_ids=true, to_apply=%add
+%ag = bf16[64,128]{1,0} all-gather(%p0), channel_id=2, replica_groups=[4,4]<=[16], dimensions={0}
+%rs = f32[16,128]{1,0} reduce-scatter(%p1), channel_id=3, replica_groups=[2,8]<=[16], to_apply=%add
+%cp = f32[32]{0} collective-permute(%p2), source_target_pairs={{0,1},{1,0}}
+%ard = f32[4]{0} all-reduce-done(%h)
+%tuple_ar = (f32[128]{0}, f32[128]{0}) all-reduce(%a, %b), replica_groups=[1,4]<=[4], to_apply=%add
+"""
+
+
+def test_parses_ops_and_bytes():
+    s = collective_bytes_from_hlo(HLO)
+    # all-reduce: 4*512*2048*4 + tuple 2*128*4; -done excluded
+    ar = 4 * 512 * 2048 * 4 + 2 * 128 * 4
+    assert s.bytes_by_op["all-reduce"] == ar
+    assert s.count_by_op["all-reduce"] == 2
+    # all-gather operand = output / group(4)
+    assert s.bytes_by_op["all-gather"] == 64 * 128 * 2 / 4
+    # reduce-scatter operand = output * group(8)
+    assert s.bytes_by_op["reduce-scatter"] == 16 * 128 * 4 * 8
+    assert s.bytes_by_op["collective-permute"] == 32 * 4
+    assert "all-reduce-done" not in " ".join(s.bytes_by_op)
+
+
+def test_wire_model_is_ring():
+    s = collective_bytes_from_hlo(HLO)
+    # all-gather wire = (g-1)/g * full
+    assert abs(s.wire_bytes_by_op["all-gather"] - 64 * 128 * 2 * 3 / 4) < 1e-6
+
+
+def test_replica_group_list_form():
+    s = collective_bytes_from_hlo(
+        "%x = f32[8]{0} all-gather(%p), replica_groups={{0,1,2,3}}, dimensions={0}")
+    assert s.bytes_by_op["all-gather"] == 8 * 4 / 4

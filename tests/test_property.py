@@ -1,0 +1,62 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pack_spec, pack_tree, unpack_tree
+from repro.core.sparse import blocked_topk_sparsify, densify, sparse_beneficial
+from repro.launch.shardings import sanitize_spec
+from jax.sharding import PartitionSpec as P
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 8), st.integers(1, 8)), min_size=1, max_size=5),
+       st.integers(0, 5))
+def test_pack_unpack_roundtrip_2d(shapes, seed):
+    rng = np.random.default_rng(seed)
+    tree = {f"l{i}": jnp.asarray(rng.normal(size=s), jnp.float32)
+            for i, s in enumerate(shapes)}
+    spec = pack_spec(tree)
+    back = unpack_tree(pack_tree(tree, spec), spec)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(back[k]), np.asarray(tree[k]), rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 5))
+def test_sparse_lossless_when_under_budget(nnz, seed):
+    """densify(topk(x)) == x whenever nnz(x) <= k (the auto-mode guarantee)."""
+    rng = np.random.default_rng(seed)
+    v = np.zeros(256, np.float32)
+    pos = rng.choice(256, size=nnz, replace=False)
+    v[pos] = rng.normal(size=nnz)
+    x = jnp.asarray(v)
+    k = 16
+    idx, vals = blocked_topk_sparsify(x, k)
+    np.testing.assert_allclose(np.asarray(densify(idx, vals, 256)), v, rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 8))
+def test_sanitize_spec_always_divides(dim, axis_size):
+    class FakeMesh:
+        shape = {"data": axis_size}
+        axis_names = ("data",)
+    spec = sanitize_spec(P("data"), (dim,), FakeMesh())
+    if spec[0] is not None:
+        assert dim % axis_size == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 5))
+def test_accumulator_linearity(seed):
+    """accumulate is a linear operator: sum of parts == part of sums."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(64,)).astype(np.float32)
+    b = rng.normal(size=(64,)).astype(np.float32)
+    from repro.kernels.accumulate.ref import accumulate_ref
+    lhs = accumulate_ref(jnp.stack([jnp.asarray(a + b)]))
+    rhs = accumulate_ref(jnp.stack([jnp.asarray(a)])) + accumulate_ref(jnp.stack([jnp.asarray(b)]))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5)

@@ -1,0 +1,72 @@
+"""DBarrier / DSemaphore / SSP clock (paper §4.3/§5.3)."""
+
+import threading
+import time
+
+from repro.core import DBarrier, DSemaphore, SSPClock
+
+
+def test_barrier_releases_all():
+    b = DBarrier(4)
+    done = []
+
+    def worker(i):
+        assert b.Enter()
+        done.append(i)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    [t.start() for t in ts]
+    [t.join(5) for t in ts]
+    assert sorted(done) == [0, 1, 2, 3]
+    assert b.entries == 4
+
+
+def test_barrier_timeout():
+    b = DBarrier(2)
+    assert b.enter(timeout=0.05) is False  # nobody else arrives
+
+
+def test_semaphore_counts():
+    s = DSemaphore(2)
+    assert s.Acquire() and s.Acquire()
+    assert s.Acquire(timeout=0.05) is False
+    s.Release()
+    assert s.Acquire(timeout=1)
+
+
+def test_semaphore_fifo_wakeup():
+    s = DSemaphore(0)
+    order = []
+
+    def worker(i):
+        s.acquire()
+        order.append(i)
+
+    ts = []
+    for i in range(3):
+        t = threading.Thread(target=worker, args=(i,))
+        t.start()
+        ts.append(t)
+        time.sleep(0.05)  # enforce queue order
+    for _ in range(3):
+        s.release()
+        time.sleep(0.05)
+    [t.join(5) for t in ts]
+    assert order == [0, 1, 2]
+
+
+def test_ssp_bounded_staleness():
+    c = SSPClock(2, staleness=1)
+    c.tick(0); c.tick(0)
+    # worker 0 is 2 ahead of worker 1: must block
+    assert c.wait(0, timeout=0.05) is False
+    c.tick(1)
+    assert c.wait(0, timeout=1)
+
+
+def test_ssp_drop_worker_unblocks():
+    c = SSPClock(2, staleness=0)
+    c.tick(0)
+    assert c.wait(0, timeout=0.05) is False
+    c.drop_worker(1)
+    assert c.wait(0, timeout=1)

@@ -1,0 +1,43 @@
+"""DThread pool (paper §4.2) + failure simulation."""
+
+import time
+
+from repro.core import DThreadPool, ThreadState
+
+
+def test_pool_runs_thread_procs():
+    pool = DThreadPool(n_nodes=2, threads_per_node=3)
+
+    def proc(tid, param):
+        return tid * param
+
+    pool.create_threads(proc, param=10)
+    pool.start_all()
+    pool.join_all()
+    assert [t.result for t in pool.threads] == [0, 10, 20, 30, 40, 50]
+    assert all(t.get_state() == ThreadState.COMPLETED for t in pool.threads)
+    assert {t.node_id for t in pool.threads} == {0, 1}
+
+
+def test_kill_node_marks_lost():
+    pool = DThreadPool(n_nodes=2, threads_per_node=2)
+    import threading
+    release = threading.Event()
+
+    def proc(tid, _):
+        while not release.is_set():
+            pool.checkpoint_guard(tid)
+            time.sleep(0.01)
+        return tid
+
+    pool.create_threads(proc)
+    pool.start_all()
+    lost = pool.kill_node(1)
+    assert lost == [2, 3]
+    time.sleep(0.1)
+    release.set()
+    pool.join_all(5)
+    states = pool.states()
+    assert states[2] == ThreadState.LOST and states[3] == ThreadState.LOST
+    assert states[0] == ThreadState.COMPLETED
+    assert pool.healthy_nodes() == [0]
