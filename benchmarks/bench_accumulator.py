@@ -21,7 +21,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import emit, timeit
-from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate
+from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate, shard_map
 from repro.launch.mesh import make_host_mesh
 from repro.utils.hlo import collective_bytes_from_hlo
 
@@ -64,7 +64,7 @@ def spmd_layer():
         k = 256 if mode in ("sparse", "auto") else None
         inp = xs if mode == "sparse" else x
         expect = np.asarray(jnp.sum(inp, axis=0))
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             lambda v: accumulate(v[0], "data", mode, inner_axis="data", k=k)[None],
             mesh=mesh, in_specs=P("data", None), out_specs=P("data", None),
             check_vma=False))

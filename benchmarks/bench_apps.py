@@ -2,7 +2,8 @@
 
 GENE/LRS/KMS/FOREST/NMFS/LJ-scale datasets are shrunk to CPU-bench size but
 keep the papers' sweep structure: running time vs #iterations and vs
-#threads, per application.  Derived column records the sweep point + the
+#threads, per application.  All workloads run through the `step.Session`
+facade on the host backend; the derived column records the sweep point + the
 quality metric so regressions in either speed or convergence are visible.
 """
 
@@ -21,40 +22,40 @@ from repro.data import kmeans_dataset, logreg_dataset, nmf_dataset, powerlaw_gra
 def bench_logreg():
     x, y, _ = logreg_dataset(2000, 128, seed=0)   # GENE-shaped (n >> d)
     for iters in (6, 10, 14):
-        us = timeit(lambda: logreg.fit_threads(x, y, n_nodes=2, threads_per_node=2,
-                                               iters=iters, lr=1e-3), iters=2)
-        theta, _, _ = logreg.fit_threads(x, y, n_nodes=2, threads_per_node=2,
-                                         iters=iters, lr=1e-3)
+        us = timeit(lambda: logreg.fit(x, y, n_nodes=2, threads_per_node=2,
+                                       iters=iters, lr=1e-3), iters=2)
+        theta, _ = logreg.fit(x, y, n_nodes=2, threads_per_node=2,
+                              iters=iters, lr=1e-3)
         emit(f"logreg_iters{iters}", us, f"loss={logreg.loss(theta, x, y):.4f}")
     for threads in (1, 2, 4):
-        us = timeit(lambda: logreg.fit_threads(x, y, n_nodes=1, threads_per_node=threads,
-                                               iters=10, lr=1e-3), iters=2)
+        us = timeit(lambda: logreg.fit(x, y, n_nodes=1, threads_per_node=threads,
+                                       iters=10, lr=1e-3), iters=2)
         emit(f"logreg_threads{threads}", us, "iters=10")
 
 
 def bench_kmeans():
     x, _, _ = kmeans_dataset(20000, 32, 16, seed=0)   # KMS-shaped
     for k in (8, 16, 32):
-        us = timeit(lambda: kmeans.fit_threads(x, k, n_nodes=2, threads_per_node=2,
-                                               iters=10, seed=0), iters=2)
-        c, _, _ = kmeans.fit_threads(x, k, n_nodes=2, threads_per_node=2, iters=10, seed=0)
+        us = timeit(lambda: kmeans.fit(x, k, n_nodes=2, threads_per_node=2,
+                                       iters=10, seed=0), iters=2)
+        c, _ = kmeans.fit(x, k, n_nodes=2, threads_per_node=2, iters=10, seed=0)
         emit(f"kmeans_k{k}", us, f"inertia={kmeans.inertia(x, c):.0f}")
     for iters in (6, 10, 14):
-        us = timeit(lambda: kmeans.fit_threads(x, 16, n_nodes=2, threads_per_node=2,
-                                               iters=iters, seed=0), iters=2)
+        us = timeit(lambda: kmeans.fit(x, 16, n_nodes=2, threads_per_node=2,
+                                       iters=iters, seed=0), iters=2)
         emit(f"kmeans_iters{iters}", us, "k=16")
 
 
 def bench_nmf():
     r, _, _ = nmf_dataset(2000, 256, 16, seed=0)   # NMFS-shaped
     for rank in (8, 16, 32):
-        us = timeit(lambda: nmf.fit_threads(r, rank, n_nodes=2, threads_per_node=2,
-                                            iters=10, seed=0), iters=2)
-        p, q, _, _ = nmf.fit_threads(r, rank, n_nodes=2, threads_per_node=2, iters=10, seed=0)
+        us = timeit(lambda: nmf.fit(r, rank, n_nodes=2, threads_per_node=2,
+                                    iters=10, seed=0), iters=2)
+        p, q, _ = nmf.fit(r, rank, n_nodes=2, threads_per_node=2, iters=10, seed=0)
         emit(f"nmf_rank{rank}", us, f"frob={nmf.frob_loss(r, p, q):.4f}")
     for iters in (6, 10, 14):
-        us = timeit(lambda: nmf.fit_threads(r, 16, n_nodes=2, threads_per_node=2,
-                                            iters=iters, seed=0), iters=2)
+        us = timeit(lambda: nmf.fit(r, 16, n_nodes=2, threads_per_node=2,
+                                    iters=iters, seed=0), iters=2)
         emit(f"nmf_iters{iters}", us, "rank=16")
 
 
@@ -62,12 +63,12 @@ def bench_pagerank():
     n_v = 20000
     edges = powerlaw_graph(n_v, 8, seed=0)   # LJ-shaped
     for iters in (6, 10, 14):
-        us = timeit(lambda: pagerank.fit_threads(edges, n_v, n_nodes=2,
-                                                 threads_per_node=2, iters=iters), iters=2)
+        us = timeit(lambda: pagerank.fit(edges, n_v, n_nodes=2,
+                                         threads_per_node=2, iters=iters), iters=2)
         emit(f"pagerank_iters{iters}", us, f"edges={edges.shape[0]}")
     for threads in (1, 2, 4):
-        us = timeit(lambda: pagerank.fit_threads(edges, n_v, n_nodes=1,
-                                                 threads_per_node=threads, iters=10), iters=2)
+        us = timeit(lambda: pagerank.fit(edges, n_v, n_nodes=1,
+                                         threads_per_node=threads, iters=10), iters=2)
         emit(f"pagerank_threads{threads}", us, "iters=10")
 
 

@@ -1,9 +1,10 @@
-"""Fault-tolerance drill (paper §5.4 + Fig. 11).
+"""Fault-tolerance drill (paper §5.4 + Fig. 11), on the `step.Session` facade.
 
-Runs distributed K-means with per-iteration checkpoints, kills a node
-mid-run via the heartbeat monitor, and recovers twice — single-node vs
-multi-node recovery — reproducing the paper's comparison.  Then demonstrates
-elastic restore of an LM training checkpoint onto a *different* mesh.
+Runs distributed K-means sessions, kills a node via the heartbeat monitor,
+and recovers twice — single-node vs multi-node recovery — through
+``ft.session_recovery``, which replans thread placement over the survivors
+and rolls a fresh Session onto the surviving DSM.  Then demonstrates
+checkpoint/rollback exactness for the shared state.
 
     PYTHONPATH=src python examples/fault_tolerance_drill.py
 """
@@ -14,8 +15,9 @@ import time
 import numpy as np
 
 from repro.analytics import kmeans
+from repro.core import Session
 from repro.data import kmeans_dataset
-from repro.ft import HeartbeatMonitor, plan_recovery, save_checkpoint, restore_checkpoint
+from repro.ft import HeartbeatMonitor, save_checkpoint, restore_checkpoint, session_recovery
 
 
 def main():
@@ -35,23 +37,23 @@ def main():
     print(f"heartbeat detected failures: {failures}")
 
     # -- recovery planning: single vs multi (Fig. 11) --------------------------
-    tids_by_node = {n: [n * tpn + i for i in range(tpn)] for n in range(n_nodes)}
     for mode in ("single", "multi"):
-        plan = plan_recovery([2], list(range(n_nodes)), tids_by_node, mode=mode)
+        failed_session = Session(backend="host", n_nodes=n_nodes,
+                                 threads_per_node=tpn)
+        plan, recovered = session_recovery(
+            failed_session, failures[0] if failures else [2], mode=mode,
+            threads_per_node=tpn if mode == "multi" else tpn * 2)
         t0 = time.time()
         # recovery = reload the dead node's partitions + recompute one iteration
-        centers, _, _ = kmeans.fit_threads(
-            x, 8, n_nodes=len(plan.new_world),
-            threads_per_node=tpn if mode == "multi" else tpn * 2,
-            iters=1, seed=0)
+        centers, _ = kmeans.fit(x, 8, iters=1, seed=0, session=recovered)
         dt = (time.time() - t0) * 1e3
         print(f"{mode:>6s}-node recovery: reassign {plan.reassignment} "
               f"redo-iteration {dt:.0f}ms")
 
     # -- checkpoint/rollback exactness ------------------------------------------
     with tempfile.TemporaryDirectory() as d:
-        centers1, _, _ = kmeans.fit_threads(x, 8, n_nodes=2, threads_per_node=2,
-                                            iters=6, seed=0)
+        centers1, _ = kmeans.fit(x, 8, n_nodes=2, threads_per_node=2,
+                                 iters=6, seed=0)
         save_checkpoint(d, 6, {"centers": centers1})
         restored, _, step = restore_checkpoint(d, {"centers": centers1})
         assert np.allclose(restored["centers"], centers1)

@@ -1,12 +1,13 @@
-"""Paper §4.5 end-to-end: logistic regression three ways.
+"""Paper §4.5 end-to-end: logistic regression three ways, one workload.
 
-1. fit_reference — single-thread oracle
-2. fit_threads   — the paper's DThread + DSM + DAddAccumulator program
-3. fit_spmd      — the same STEP program as shard_map over a device mesh
+1. fit_reference        — single-thread oracle
+2. fit(backend="host")  — the paper's DThread + DSM + accumulator program
+3. fit(backend="spmd")  — the same thread_proc as shard_map over a mesh
 
 All three produce identical parameters (the accumulator is exact), which is
 the point: the STEP programming model is a *semantics-preserving* distribution
-of the sequential program.
+of the sequential program, and the Session facade makes the substrate a
+constructor argument instead of a rewrite.
 
     PYTHONPATH=src python examples/logistic_regression.py
 """
@@ -16,7 +17,6 @@ import numpy as np
 from repro.analytics import logreg
 from repro.core import AccumMode
 from repro.data import logreg_dataset
-from repro.launch.mesh import make_host_mesh
 
 
 def main():
@@ -26,16 +26,17 @@ def main():
     print(f"reference loss: {logreg.loss(ref, x, y):.4f}")
 
     for mode in (AccumMode.GATHER_ALL, AccumMode.REDUCE_SCATTER, AccumMode.AUTO):
-        theta, _store, accu = logreg.fit_threads(
-            x, y, n_nodes=2, threads_per_node=2, iters=20, lr=1e-3, mode=mode)
+        theta, sess = logreg.fit(x, y, backend="host", n_nodes=2,
+                                 threads_per_node=2, iters=20, lr=1e-3, mode=mode)
         drift = float(np.max(np.abs(theta - ref)))
-        print(f"threads[{mode.value:>14s}] loss {logreg.loss(theta, x, y):.4f} "
-              f"drift {drift:.2e} wire {accu.bytes_transferred:>8d} elems")
+        print(f"host[{mode.value:>14s}] loss {logreg.loss(theta, x, y):.4f} "
+              f"drift {drift:.2e} wire {sess.wire_traffic():>8d} elems")
 
-    mesh = make_host_mesh(data=1)  # grows with available devices
-    spmd = logreg.fit_spmd(x, y, mesh, iters=20, lr=1e-3)
-    print(f"spmd loss: {logreg.loss(spmd, x, y):.4f} "
-          f"drift {float(np.max(np.abs(spmd - ref))):.2e}")
+    spmd, sess = logreg.fit(x, y, backend="spmd", iters=20, lr=1e-3)
+    print(f"spmd[{sess.backend.n_threads} threads] loss: "
+          f"{logreg.loss(spmd, x, y):.4f} "
+          f"drift {float(np.max(np.abs(spmd - ref))):.2e} "
+          f"wire {sess.wire_traffic():>8d} elems")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,9 @@
 
 Shows the paper's sparse/auto accumulator decision in action: threads owning
 edges with concentrated destinations produce sparse credit vectors, and the
-``auto`` mode ships (index, value) pairs only when cheaper.
+``auto`` mode ships (index, value) pairs only when cheaper.  Everything runs
+through the Session facade — swap ``backend="spmd"`` to put the same workload
+on a device mesh.
 
     PYTHONPATH=src python examples/pagerank_graph.py
 """
@@ -21,11 +23,11 @@ def main():
 
     ref = pagerank.fit_reference(edges, n_vertices, iters=15)
     for mode in (AccumMode.GATHER_ALL, AccumMode.REDUCE_SCATTER, AccumMode.AUTO):
-        ranks, _store, accu = pagerank.fit_threads(
-            edges, n_vertices, n_nodes=2, threads_per_node=2, iters=15, mode=mode)
+        ranks, sess = pagerank.fit(edges, n_vertices, backend="host", n_nodes=2,
+                                   threads_per_node=2, iters=15, mode=mode)
         drift = float(np.max(np.abs(ranks - ref)))
         print(f"[{mode.value:>14s}] top vertex {int(np.argmax(ranks))} "
-              f"drift {drift:.2e} wire {accu.bytes_transferred:>9d} elems")
+              f"drift {drift:.2e} wire {sess.wire_traffic():>9d} elems")
     print("top-5 ranked vertices:", np.argsort(-ref)[:5].tolist())
 
 

@@ -1,9 +1,14 @@
-"""Quickstart: the STEP-JAX stack in ~40 lines.
+"""Quickstart: the STEP-JAX stack in ~40 lines, through the `step.Session` facade.
 
-Declares shared state in a GlobalStore (the DSM), runs the paper's worked
-example — distributed-multi-threaded logistic regression with the
-DAddAccumulator — then trains a tiny LM end-to-end through the production
-step builder.
+One `Session` object is the whole Table-1 API: shared state is declared with
+``def_global``/``new_array`` and handled via typed `SharedRef` handles
+(``.get()/.set()/.inc()/.accumulate()``), threads are spawned with
+``session.run``, and the *same* workload code executes on the host backend
+(paper-faithful DThreads + blocking accumulator) or the SPMD backend
+(shard_map over a device mesh) — pick one at ``Session(backend=...)``.
+The script declares shared state, runs the paper's worked example
+(distributed multi-threaded logistic regression) on both backends, then
+trains a tiny LM end-to-end through the production step builder.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,25 +16,28 @@ step builder.
 import numpy as np
 
 from repro.analytics import logreg
-from repro.core import AccumMode, GlobalStore
+from repro.core import AccumMode, Session
 from repro.data import logreg_dataset
 
 
 def main():
-    # 1. DSM + shared data (paper §4.1)
-    store = GlobalStore(granularity="coarse")
-    store.def_global("step_size", 1e-3)
-    store.new_array("grad", (32,))
-    print(f"DSM declared: {store.names()}, grad addr=0x{store.address('grad'):x}")
+    # 1. the Table-1 facade: DSM declaration through handles (paper §4.1)
+    sess = Session(backend="host", n_nodes=2, threads_per_node=2)
+    step_size = sess.def_global("step_size", 1e-3)
+    grad = sess.new_array("grad", (32,))
+    print(f"DSM declared: {sess.names()}, grad addr=0x{grad.address:x}, "
+          f"step_size={float(step_size.get()):g}")
 
-    # 2. the paper's §4.5 example: distributed multi-threaded logistic regression
+    # 2. the paper's §4.5 example on BOTH backends — same thread_proc
     x, y, _ = logreg_dataset(n_rows=800, n_features=32, seed=0)
-    theta, store2, accu = logreg.fit_threads(
-        x, y, n_nodes=2, threads_per_node=2, iters=15, lr=1e-3,
-        mode=AccumMode.REDUCE_SCATTER)
-    print(f"logreg loss: {logreg.loss(theta, x, y):.4f} "
-          f"(accumulator wire traffic: {accu.bytes_transferred} elements, "
+    theta, hsess = logreg.fit(x, y, backend="host", n_nodes=2, threads_per_node=2,
+                              iters=15, lr=1e-3, mode=AccumMode.REDUCE_SCATTER)
+    print(f"logreg[host] loss: {logreg.loss(theta, x, y):.4f} "
+          f"(accumulator wire traffic: {hsess.wire_traffic()} elements, "
           f"(N+1)·V·iters = {(4 + 1) * 32 * 15})")
+    theta_s, ssess = logreg.fit(x, y, backend="spmd", iters=15, lr=1e-3)
+    print(f"logreg[spmd] loss: {logreg.loss(theta_s, x, y):.4f} "
+          f"drift vs host {float(np.max(np.abs(theta_s - theta))):.2e}")
 
     # 3. a tiny LM through the production trainer
     from repro.launch.train import train

@@ -5,7 +5,8 @@ Reproduction + TPU-native adaptation of:
   (Mei, Shen, Zhu, Huang - SJTU, 2018).
 
 Public surface:
-  repro.core       - DSM GlobalStore, DAddAccumulator, sync, threads, cache
+  repro.core       - step.Session (the Table-1 facade), DSM GlobalStore,
+                     DAddAccumulator, sync, threads, cache
   repro.optim      - optimizers, ZeRO-1 (accumulator-sharded), compression
   repro.models     - the assigned LM architectures
   repro.analytics  - the paper's four applications (logreg/kmeans/nmf/pagerank)

@@ -1,7 +1,11 @@
-"""The paper's four applications (logreg / kmeans / nmf / pagerank), each in
-three forms: fit_reference (single-thread oracle), fit_threads (the paper's
-Pthreads-style DThread + DSM + accumulator programming model), and fit_spmd
-(shard_map production path)."""
+"""The paper's four applications (logreg / kmeans / nmf / pagerank).
+
+Each exposes ``fit_reference`` (single-thread oracle) and ``fit`` — one
+backend-agnostic ``thread_proc`` over the `step.Session` facade that runs on
+either substrate: ``backend="host"`` (the paper's Pthreads-style DThread +
+DSM + accumulator programming model) or ``backend="spmd"`` (one STEP thread
+per mesh position via shard_map, the production path).  The pre-Session
+entry points ``fit_threads`` / ``fit_spmd`` remain as deprecation shims."""
 
 from repro.analytics import kmeans, logreg, nmf, pagerank
 

@@ -1,10 +1,11 @@
-"""K-means (paper §6.5): Lloyd iterations over partitioned points.
+"""K-means (paper §6.5) on the Session facade: Lloyd iterations, shared centers.
 
 Per iteration, each thread assigns its points to the nearest center (the
 ``kmeans_assign`` Pallas kernel is the TPU hot loop), builds per-cluster
 partial sums + counts, and ships them through the accumulator — the shared
-centers in DSM are then ``sum / count``.  Exactly the Petuum/paper algorithm,
-with the accumulator replacing the parameter server.
+centers in DSM are then ``sum / count``.  One ``thread_proc`` serves both the
+host backend (DThreadPool + DAddAccumulator, the paper's programming model)
+and the SPMD backend (shard_map over a mesh, the production path).
 """
 
 from __future__ import annotations
@@ -15,9 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate
-from repro.core.threads import DThreadPool
-from repro.data.pipeline import partition_rows
+from repro.core import AccumMode, Session
+from repro.core.session import SpmdBackend, deprecated_entry
 
 
 @jax.jit
@@ -50,74 +50,66 @@ def fit_reference(x, k: int, iters: int = 10, seed: int = 0):
     return np.asarray(centers)
 
 
+def fit(x, k: int, *, iters: int = 10, seed: int = 0,
+        mode: Optional[AccumMode | str] = None, use_kernel: bool = False,
+        session: Optional[Session] = None, backend: str = "host",
+        n_nodes: int = 2, threads_per_node: int = 2, mesh=None):
+    """Lloyd iterations through the Table-1 facade; backend-agnostic.
+
+    Returns ``(centers, session)``.
+    """
+    sess = session or Session(backend=backend, n_nodes=n_nodes,
+                              threads_per_node=threads_per_node, mesh=mesh)
+    rng = np.random.default_rng(seed)
+    d = x.shape[1]
+    centers = sess.def_global(
+        "centers", jnp.asarray(x[rng.choice(x.shape[0], k, replace=False)]))
+    partials = sess.new_array("partials", (k * (d + 1),))
+
+    def thread_proc(ctx, pts):
+        for _ in range(iters):
+            ctx.guard()
+            c = centers.get()
+            if use_kernel:
+                from repro.kernels.kmeans_assign.ops import kmeans_assign
+                a, _dist = kmeans_assign(pts, c)
+            else:
+                a, _dist = _assign(pts, c)
+            sums, counts = _partials(pts, a, k)
+            flat = partials.accumulate(
+                jnp.concatenate([sums.reshape(-1), counts]), mode=mode)
+            sums_g = flat[: k * d].reshape(k, d)
+            counts_g = flat[k * d:]
+            # §4.5 pattern: every thread re-derives the identical center update
+            centers.set(sums_g / jnp.maximum(counts_g[:, None], 1.0))
+        return None
+
+    sess.run(thread_proc, data=(jnp.asarray(x),))
+    return np.asarray(centers.get()), sess
+
+
+# ---------------------------------------------------------------------------
+# Deprecated pre-Session entry points
+# ---------------------------------------------------------------------------
+
+
 def fit_threads(x, k: int, *, n_nodes: int = 2, threads_per_node: int = 2,
                 iters: int = 10, seed: int = 0,
                 mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
                 use_kernel: bool = False):
-    """Paper programming model: threads + DSM centers + accumulator."""
-    store = GlobalStore()
-    rng = np.random.default_rng(seed)
-    d = x.shape[1]
-    init_centers = x[rng.choice(x.shape[0], k, replace=False)]
-    store.def_global("centers", jnp.asarray(init_centers))
-    store.new_array("partials", (k * (d + 1),))
-    pool = DThreadPool(n_nodes, threads_per_node)
-    accu = DAddAccumulator(store, "partials", pool.n_threads, n_nodes, mode)
-    xj = jnp.asarray(x)
-
-    def slave_proc(tid, _param):
-        lo, hi = partition_rows(x.shape[0], tid, pool.n_threads)
-        pts = xj[lo:hi]
-        for _ in range(iters):
-            pool.checkpoint_guard(tid)
-            centers = store.get("centers")
-            if use_kernel:
-                from repro.kernels.kmeans_assign.ops import kmeans_assign
-                a, _dist = kmeans_assign(pts, centers)
-            else:
-                a, _dist = _assign(pts, centers)
-            sums, counts = _partials(pts, a, k)
-            accu.accumulate(jnp.concatenate([sums.reshape(-1), counts]))
-            if tid == 0:  # one thread applies the center update (§4.5 pattern)
-                flat = store.get("partials")
-                sums_g = flat[: k * d].reshape(k, d)
-                counts_g = flat[k * d:]
-                store.set("centers", sums_g / jnp.maximum(counts_g[:, None], 1.0))
-            accu._barrier.wait()  # everyone sees the new centers next iter
-        return True
-
-    pool.create_threads(slave_proc)
-    pool.start_all()
-    pool.join_all()
-    return np.asarray(store.get("centers")), store, accu
+    """Deprecated shim: ``fit(backend="host")`` with the old return tuple."""
+    deprecated_entry("kmeans.fit_threads", 'kmeans.fit(backend="host")')
+    sess = Session(backend="host", n_nodes=n_nodes,
+                   threads_per_node=threads_per_node, accum_mode=mode)
+    centers, sess = fit(x, k, iters=iters, seed=seed, mode=mode,
+                        use_kernel=use_kernel, session=sess)
+    return centers, sess.store, sess.accumulator("partials")
 
 
 def fit_spmd(x, k: int, mesh, *, iters: int = 10, seed: int = 0,
              mode: AccumMode | str = AccumMode.REDUCE_SCATTER):
-    from jax.sharding import PartitionSpec as P
-
-    rng = np.random.default_rng(seed)
-    init_centers = jnp.asarray(x[rng.choice(x.shape[0], k, replace=False)])
-    n_threads = mesh.shape["data"]
-    per = x.shape[0] // n_threads
-    xj = jnp.asarray(x[: per * n_threads])
-    d = x.shape[1]
-
-    def thread_proc(pts, centers0):
-        def body(centers, _):
-            a, _dist = _assign(pts, centers)
-            sums, counts = _partials(pts, a, k)
-            flat = accumulate(jnp.concatenate([sums.reshape(-1), counts]), "data", mode)
-            sums_g = flat[: k * d].reshape(k, d)
-            counts_g = flat[k * d:]
-            return sums_g / jnp.maximum(counts_g[:, None], 1.0), None
-
-        centers, _ = jax.lax.scan(body, centers0[0], None, length=iters)
-        return centers[None]
-
-    f = jax.jit(jax.shard_map(
-        thread_proc, mesh=mesh,
-        in_specs=(P("data", None), P(None, None, None)),
-        out_specs=P("data", None, None), check_vma=False))
-    reps = f(xj, init_centers[None])
-    return np.asarray(reps[0])
+    """Deprecated shim: ``fit(backend="spmd")``."""
+    deprecated_entry("kmeans.fit_spmd", 'kmeans.fit(backend="spmd")')
+    sess = Session(backend=SpmdBackend(mesh=mesh))
+    centers, _ = fit(x, k, iters=iters, seed=seed, mode=mode, session=sess)
+    return centers

@@ -1,11 +1,14 @@
-"""Logistic regression — the paper's worked example (§4.5), both execution modes.
+"""Logistic regression — the paper's worked example (§4.5) on the Session facade.
 
-``fit_threads`` is a line-by-line port of the paper's ``slave_proc``: every
-working thread keeps a local ``theta``, computes the gradient over its
-partition (``LoadTrainPoint``), pushes it through the shared
-``DAddAccumulator`` (a synchronisation point), and applies the accumulated
-global gradient from DSM.  ``fit_spmd`` is the same program as one STEP thread
-per mesh position via ``shard_map`` — the production path.
+``fit`` is a line-by-line port of the paper's ``slave_proc``: every working
+thread keeps a local ``theta``, computes the gradient over its partition
+(``LoadTrainPoint``), pushes it through the shared accumulator (a
+synchronisation point), and applies the accumulated global gradient from DSM.
+The *same* ``thread_proc`` runs on either substrate — ``backend="host"``
+(DThreadPool + DAddAccumulator) or ``backend="spmd"`` (one STEP thread per
+mesh position via shard_map) — selected at ``Session`` construction.
+
+``fit_threads`` / ``fit_spmd`` remain as deprecation shims over ``fit``.
 """
 
 from __future__ import annotations
@@ -16,9 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate
-from repro.core.threads import DThreadPool
-from repro.data.pipeline import partition_rows
+from repro.core import AccumMode, Session
+from repro.core.dsm import GlobalStore
+from repro.core.session import SpmdBackend, deprecated_entry
 
 
 def _sigmoid(z):
@@ -45,100 +48,80 @@ def fit_reference(x, y, iters: int = 10, lr: float = 1e-3):
     return np.asarray(theta)
 
 
-def fit_threads(x, y, *, n_nodes: int = 2, threads_per_node: int = 2,
-                iters: int = 10, lr: float = 1e-3,
-                mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
-                store: Optional[GlobalStore] = None):
-    """Paper §4.5 programming model on the host thread pool."""
-    store = store or GlobalStore()
-    d = x.shape[1]
-    store.def_global("param_len", d)
-    store.new_array("grad", (d,))
-    pool = DThreadPool(n_nodes, threads_per_node)
-    accu = DAddAccumulator(store, "grad", pool.n_threads, n_nodes, mode)
-    xj, yj = jnp.asarray(x), jnp.asarray(y)
+def fit(x, y, *, iters: int = 10, lr: float = 1e-3,
+        mode: Optional[AccumMode | str] = None, k: Optional[int] = None,
+        session: Optional[Session] = None, backend: str = "host",
+        n_nodes: int = 2, threads_per_node: int = 2, mesh=None):
+    """Paper §4.5 through the Table-1 facade; backend-agnostic.
 
-    def slave_proc(tid, _param):
+    Returns ``(theta, session)`` — the session exposes the store, cache and
+    accumulator traffic for inspection.
+    """
+    sess = session or Session(backend=backend, n_nodes=n_nodes,
+                              threads_per_node=threads_per_node, mesh=mesh)
+    d = x.shape[1]
+    grad = sess.new_array("grad", (d,))
+
+    def thread_proc(ctx, xs, ys):
         theta = jnp.zeros((d,), jnp.float32)          # local copy (paper line 10)
-        lo, hi = partition_rows(x.shape[0], tid, pool.n_threads)  # LoadTrainPoint
-        xs, ys = xj[lo:hi], yj[lo:hi]
         for _ in range(iters):
-            pool.checkpoint_guard(tid)
-            local_grad = _local_grad(theta, xs, ys)   # lines 14–21
-            accu.accumulate(local_grad)               # line 22 (sync point)
-            theta = theta + lr * store.get("grad")    # lines 23–24
+            ctx.guard()
+            local = _local_grad(theta, xs, ys)        # lines 14–21
+            total = grad.accumulate(local, mode=mode, k=k)  # line 22 (sync point)
+            theta = theta + lr * total                # lines 23–24
         return theta
 
-    pool.create_threads(slave_proc)
-    pool.start_all()
-    pool.join_all()
-    thetas = [t.result for t in pool.threads]
-    return np.asarray(thetas[0]), store, accu
-
-
-def fit_spmd(x, y, mesh, *, iters: int = 10, lr: float = 1e-3,
-             mode: AccumMode | str = AccumMode.REDUCE_SCATTER, k: int = 0):
-    """One STEP thread per mesh position (shard_map) — the production path."""
-    from jax.sharding import PartitionSpec as P
-
-    n = x.shape[0]
-    n_threads = mesh.shape["data"]
-    per = n // n_threads
-    x = jnp.asarray(x[: per * n_threads])
-    y = jnp.asarray(y[: per * n_threads])
-    d = x.shape[1]
-
-    def thread_proc(xs, ys):
-        theta = jnp.zeros((d,), jnp.float32)
-
-        def body(theta, _):
-            g = _local_grad(theta, xs, ys)
-            g = accumulate(g, "data", mode, k=k or None)
-            return theta + lr * g, None
-
-        theta, _ = jax.lax.scan(body, theta, None, length=iters)
-        return theta[None]
-
-    f = jax.jit(jax.shard_map(
-        thread_proc, mesh=mesh,
-        in_specs=(P("data", None), P("data")),
-        out_specs=P("data", None), check_vma=False))
-    thetas = f(x, y)
-    return np.asarray(thetas[0])
+    thetas = sess.run(thread_proc, data=(jnp.asarray(x), jnp.asarray(y)))
+    return np.asarray(thetas[0]), sess
 
 
 def fit_ssp(x, y, *, n_workers: int = 4, staleness: int = 1, iters: int = 10,
             lr: float = 1e-3):
     """Asynchronous SGD under Stale Synchronous Parallel (paper §7 / Petuum).
 
-    Workers update the shared theta in DSM without a barrier; the SSP clock
-    only blocks a worker that runs more than `staleness` iterations ahead of
-    the slowest — the paper's straggler-mitigation mode.  With staleness=0
-    this degenerates to fully synchronous (barrier-per-iteration) execution.
+    Workers update the shared theta in DSM without a barrier — ``theta.inc``
+    is the atomic Table-1 increment — and the SSP clock only blocks a worker
+    that runs more than ``staleness`` iterations ahead of the slowest.  With
+    ``staleness=0`` this degenerates to fully synchronous execution.
     """
-    import threading
-
-    from repro.core import GlobalStore, SSPClock
-
-    store = GlobalStore()
+    sess = Session(backend="host", n_nodes=n_workers, threads_per_node=1)
     d = x.shape[1]
-    store.def_global("theta", jnp.zeros((d,), jnp.float32))
-    clock = SSPClock(n_workers, staleness=staleness)
-    lock = threading.Lock()
-    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    theta = sess.def_global("theta", jnp.zeros((d,), jnp.float32))
+    clock = sess.ssp_clock(staleness)
 
-    def worker(tid):
-        lo, hi = partition_rows(x.shape[0], tid, n_workers)
-        xs, ys = xj[lo:hi], yj[lo:hi]
+    def worker(ctx, xs, ys):
         for _ in range(iters):
-            theta = store.get("theta")             # possibly stale replica
-            g = _local_grad(theta, xs, ys)
-            with lock:                             # atomic DSM update
-                store.set("theta", store.get("theta") + lr * g, bump_epoch=True)
-            clock.tick(tid)
-            clock.wait(tid)                        # bounded staleness
+            g = _local_grad(theta.get(), xs, ys)   # possibly stale replica
+            theta.inc(lr * g)                      # atomic DSM update
+            clock.tick(ctx.tid)
+            clock.wait(ctx.tid)                    # bounded staleness
 
-    ts = [threading.Thread(target=worker, args=(i,)) for i in range(n_workers)]
-    [t.start() for t in ts]
-    [t.join(60) for t in ts]
-    return np.asarray(store.get("theta")), clock
+    sess.run(worker, data=(jnp.asarray(x), jnp.asarray(y)), timeout=60)
+    return np.asarray(theta.get()), clock
+
+
+# ---------------------------------------------------------------------------
+# Deprecated pre-Session entry points
+# ---------------------------------------------------------------------------
+
+
+def fit_threads(x, y, *, n_nodes: int = 2, threads_per_node: int = 2,
+                iters: int = 10, lr: float = 1e-3,
+                mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
+                store: Optional[GlobalStore] = None):
+    """Deprecated shim: ``fit(backend="host")`` with the old return tuple."""
+    deprecated_entry("logreg.fit_threads", 'logreg.fit(backend="host")')
+    sess = Session(backend="host", n_nodes=n_nodes,
+                   threads_per_node=threads_per_node, store=store,
+                   accum_mode=mode)
+    theta, sess = fit(x, y, iters=iters, lr=lr, mode=mode, session=sess)
+    return theta, sess.store, sess.accumulator("grad")
+
+
+def fit_spmd(x, y, mesh, *, iters: int = 10, lr: float = 1e-3,
+             mode: AccumMode | str = AccumMode.REDUCE_SCATTER, k: int = 0):
+    """Deprecated shim: ``fit(backend="spmd")``."""
+    deprecated_entry("logreg.fit_spmd", 'logreg.fit(backend="spmd")')
+    sess = Session(backend=SpmdBackend(mesh=mesh))
+    theta, _ = fit(x, y, iters=iters, lr=lr, mode=mode, k=k or None, session=sess)
+    return theta

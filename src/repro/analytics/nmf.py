@@ -1,20 +1,22 @@
-"""NMF (paper §6.6): R ≈ P·Q with row-partitioned R/P and globally shared Q.
+"""NMF (paper §6.6) on the Session facade: R ≈ P·Q, globally shared Q.
 
 Multiplicative updates (Lee–Seung).  With rows partitioned across threads,
 P's update is thread-local; Q's update needs two global reductions —
-numer = PᵀR (k×m) and gram = PᵀP (k×k) — which is precisely a
-DAddAccumulator workload (the paper keeps the factorized matrices in DSM).
+numer = PᵀR (k×m) and gram = PᵀP (k×k) — which is precisely an accumulator
+workload (the paper keeps the factorized matrices in DSM).  One
+``thread_proc`` serves both the host and SPMD backends.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate
-from repro.core.threads import DThreadPool
-from repro.data.pipeline import partition_rows
+from repro.core import AccumMode, Session
+from repro.core.session import SpmdBackend, deprecated_entry
 
 _EPS = 1e-9
 
@@ -46,79 +48,64 @@ def fit_reference(r, k: int, iters: int = 10, seed: int = 0):
     return np.asarray(p), np.asarray(q)
 
 
-def fit_threads(r, k: int, *, n_nodes: int = 2, threads_per_node: int = 2,
-                iters: int = 10, seed: int = 0,
-                mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
-                store=None):
-    store = store or GlobalStore()
+def fit(r, k: int, *, iters: int = 10, seed: int = 0,
+        mode: Optional[AccumMode | str] = None,
+        session: Optional[Session] = None, backend: str = "host",
+        n_nodes: int = 2, threads_per_node: int = 2, mesh=None):
+    """Lee–Seung updates through the Table-1 facade; backend-agnostic.
+
+    Returns ``(p, q, session)``.
+    """
+    sess = session or Session(backend=backend, n_nodes=n_nodes,
+                              threads_per_node=threads_per_node, mesh=mesh)
     rng = np.random.default_rng(seed)
     n, m = r.shape
     # same init stream as fit_reference (P then Q) so trajectories match exactly
     p_full0 = np.abs(rng.normal(size=(n, k))).astype(np.float32)
     q0 = np.abs(rng.normal(size=(k, m))).astype(np.float32)
-    store.def_global("Q", jnp.asarray(q0))
-    store.new_array("q_partials", (k * m + k * k,))
-    pool = DThreadPool(n_nodes, threads_per_node)
-    accu = DAddAccumulator(store, "q_partials", pool.n_threads, n_nodes, mode)
-    rj = jnp.asarray(r)
-    results = {}
+    Q = sess.def_global("Q", jnp.asarray(q0))
+    q_partials = sess.new_array("q_partials", (k * m + k * k,))
 
-    def slave_proc(tid, _param):
-        lo, hi = partition_rows(n, tid, pool.n_threads)
-        r_loc = rj[lo:hi]
-        p_loc = jnp.asarray(p_full0[lo:hi])
+    def thread_proc(ctx, r_loc, p_loc):
         for _ in range(iters):
-            pool.checkpoint_guard(tid)
-            q = store.get("Q")
+            ctx.guard()
+            q = Q.get()
             p_loc = _update_p(p_loc, q, r_loc)
             numer, gram = _q_partials(p_loc, r_loc)
-            accu.accumulate(jnp.concatenate([numer.reshape(-1), gram.reshape(-1)]))
-            if tid == 0:
-                flat = store.get("q_partials")
-                numer_g = flat[: k * m].reshape(k, m)
-                gram_g = flat[k * m:].reshape(k, k)
-                store.set("Q", q * numer_g / (gram_g @ q + _EPS))
-            accu._barrier.wait()
-        results[tid] = p_loc
+            flat = q_partials.accumulate(
+                jnp.concatenate([numer.reshape(-1), gram.reshape(-1)]), mode=mode)
+            numer_g = flat[: k * m].reshape(k, m)
+            gram_g = flat[k * m:].reshape(k, k)
+            Q.set(q * numer_g / (gram_g @ q + _EPS))
         return p_loc
 
-    pool.create_threads(slave_proc)
-    pool.start_all()
-    pool.join_all()
-    p_full = np.concatenate([np.asarray(results[t]) for t in sorted(results)], axis=0)
-    return p_full, np.asarray(store.get("Q")), store, accu
+    ps = sess.run(thread_proc, data=(jnp.asarray(r), jnp.asarray(p_full0)))
+    p_full = np.concatenate([np.asarray(p) for p in ps], axis=0)
+    return p_full, np.asarray(Q.get()), sess
+
+
+# ---------------------------------------------------------------------------
+# Deprecated pre-Session entry points
+# ---------------------------------------------------------------------------
+
+
+def fit_threads(r, k: int, *, n_nodes: int = 2, threads_per_node: int = 2,
+                iters: int = 10, seed: int = 0,
+                mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
+                store=None):
+    """Deprecated shim: ``fit(backend="host")`` with the old return tuple."""
+    deprecated_entry("nmf.fit_threads", 'nmf.fit(backend="host")')
+    sess = Session(backend="host", n_nodes=n_nodes,
+                   threads_per_node=threads_per_node, store=store,
+                   accum_mode=mode)
+    p, q, sess = fit(r, k, iters=iters, seed=seed, mode=mode, session=sess)
+    return p, q, sess.store, sess.accumulator("q_partials")
 
 
 def fit_spmd(r, k: int, mesh, *, iters: int = 10, seed: int = 0,
              mode: AccumMode | str = AccumMode.REDUCE_SCATTER):
-    from jax.sharding import PartitionSpec as P
-
-    rng = np.random.default_rng(seed)
-    n, m = r.shape
-    n_threads = mesh.shape["data"]
-    per = n // n_threads
-    rj = jnp.asarray(r[: per * n_threads])
-    # same init stream as fit_reference (P then Q)
-    p0 = jnp.asarray(np.abs(rng.normal(size=(n, k))).astype(np.float32)[: per * n_threads])
-    q0 = jnp.asarray(np.abs(rng.normal(size=(k, m))).astype(np.float32))
-
-    def thread_proc(r_loc, p_loc, q0r):
-        def body(carry, _):
-            p, q = carry
-            p = _update_p(p, q, r_loc)
-            numer, gram = _q_partials(p, r_loc)
-            flat = accumulate(jnp.concatenate([numer.reshape(-1), gram.reshape(-1)]),
-                              "data", mode)
-            numer_g = flat[: k * m].reshape(k, m)
-            gram_g = flat[k * m:].reshape(k, k)
-            return (p, q * numer_g / (gram_g @ q + _EPS)), None
-
-        (p, q), _ = jax.lax.scan(body, (p_loc, q0r[0]), None, length=iters)
-        return p, q[None]
-
-    f = jax.jit(jax.shard_map(
-        thread_proc, mesh=mesh,
-        in_specs=(P("data", None), P("data", None), P(None, None, None)),
-        out_specs=(P("data", None), P("data", None, None)), check_vma=False))
-    p, q = f(rj, p0, q0[None])
-    return np.asarray(p), np.asarray(q[0])
+    """Deprecated shim: ``fit(backend="spmd")``."""
+    deprecated_entry("nmf.fit_spmd", 'nmf.fit(backend="spmd")')
+    sess = Session(backend=SpmdBackend(mesh=mesh))
+    p, q, _ = fit(r, k, iters=iters, seed=seed, mode=mode, session=sess)
+    return p, q

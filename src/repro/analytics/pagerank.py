@@ -1,4 +1,4 @@
-"""PageRank (paper §6.7): edge-partitioned credit accumulation.
+"""PageRank (paper §6.7) on the Session facade: edge-partitioned credits.
 
 Each thread owns a slice of the edge list; per iteration it computes the
 credit vector its sources send along their out-edges and accumulates it
@@ -6,16 +6,20 @@ credit vector its sources send along their out-edges and accumulates it
 because the accumulator ships V-length vectors, not per-edge messages as
 Husky does).  The accumulator's ``sparse``/``auto`` modes engage when the
 per-thread credit vector is sparse — graphs with concentrated out-degrees.
+One ``thread_proc`` serves both the host and SPMD backends; the out-degree
+vector rides along replicated (``broadcast=``).
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate
-from repro.core.threads import DThreadPool
+from repro.core import AccumMode, Session
+from repro.core.session import SpmdBackend, deprecated_entry
 
 DAMPING = 0.85
 
@@ -36,63 +40,62 @@ def fit_reference(edges, n_vertices: int, iters: int = 10):
     return np.asarray(ranks)
 
 
-def fit_threads(edges, n_vertices: int, *, n_nodes: int = 2, threads_per_node: int = 2,
-                iters: int = 10, mode: AccumMode | str = AccumMode.AUTO):
-    store = GlobalStore()
+def fit(edges, n_vertices: int, *, iters: int = 10,
+        mode: Optional[AccumMode | str] = AccumMode.AUTO, k: Optional[int] = None,
+        session: Optional[Session] = None, backend: str = "host",
+        n_nodes: int = 2, threads_per_node: int = 2, mesh=None):
+    """Credit accumulation through the Table-1 facade; backend-agnostic.
+
+    ``mode="auto"`` on the SPMD backend needs a top-k budget ``k`` (the host
+    accumulator measures nnz itself); without one it falls back to
+    ``reduce_scatter`` — numerically identical, since auto is lossless.
+    Returns ``(ranks, session)``.
+    """
+    sess = session or Session(backend=backend, n_nodes=n_nodes,
+                              threads_per_node=threads_per_node, mesh=mesh)
+    if (mode is not None and AccumMode(mode) == AccumMode.AUTO
+            and k is None and sess.backend.kind == "spmd"):
+        mode = AccumMode.REDUCE_SCATTER
     src_all, dst_all = jnp.asarray(edges[:, 0]), jnp.asarray(edges[:, 1])
     out_deg = jnp.maximum(jnp.zeros(n_vertices).at[src_all].add(1.0), 1.0)
-    store.def_global("ranks", jnp.full((n_vertices,), 1.0 / n_vertices))
-    store.new_array("credits", (n_vertices,))
-    pool = DThreadPool(n_nodes, threads_per_node)
-    accu = DAddAccumulator(store, "credits", pool.n_threads, n_nodes, mode)
-    n_edges = edges.shape[0]
-    per = n_edges // pool.n_threads
+    ranks = sess.def_global("ranks", jnp.full((n_vertices,), 1.0 / n_vertices))
+    credits = sess.new_array("credits", (n_vertices,))
 
-    def slave_proc(tid, _param):
-        lo = tid * per
-        hi = n_edges if tid == pool.n_threads - 1 else lo + per
-        src, dst = src_all[lo:hi], dst_all[lo:hi]
+    def thread_proc(ctx, edges_loc, deg):
+        src, dst = edges_loc[:, 0], edges_loc[:, 1]
         for _ in range(iters):
-            pool.checkpoint_guard(tid)
-            ranks = store.get("ranks")
-            accu.accumulate(_credits(src, dst, ranks, out_deg, n_vertices))
-            if tid == 0:
-                credits = store.get("credits")
-                store.set("ranks", (1 - DAMPING) / n_vertices + DAMPING * credits)
-            accu._barrier.wait()
-        return True
+            ctx.guard()
+            r = ranks.get()
+            total = credits.accumulate(
+                _credits(src, dst, r, deg, n_vertices), mode=mode, k=k)
+            ranks.set((1 - DAMPING) / n_vertices + DAMPING * total)
+        return None
 
-    pool.create_threads(slave_proc)
-    pool.start_all()
-    pool.join_all()
-    return np.asarray(store.get("ranks")), store, accu
+    sess.run(thread_proc, data=(jnp.asarray(edges),), broadcast=(out_deg,))
+    return np.asarray(ranks.get()), sess
+
+
+# ---------------------------------------------------------------------------
+# Deprecated pre-Session entry points
+# ---------------------------------------------------------------------------
+
+
+def fit_threads(edges, n_vertices: int, *, n_nodes: int = 2,
+                threads_per_node: int = 2, iters: int = 10,
+                mode: AccumMode | str = AccumMode.AUTO):
+    """Deprecated shim: ``fit(backend="host")`` with the old return tuple."""
+    deprecated_entry("pagerank.fit_threads", 'pagerank.fit(backend="host")')
+    sess = Session(backend="host", n_nodes=n_nodes,
+                   threads_per_node=threads_per_node, accum_mode=mode)
+    ranks, sess = fit(edges, n_vertices, iters=iters, mode=mode, session=sess)
+    return ranks, sess.store, sess.accumulator("credits")
 
 
 def fit_spmd(edges, n_vertices: int, mesh, *, iters: int = 10,
              mode: AccumMode | str = AccumMode.REDUCE_SCATTER, k: int = 0):
-    from jax.sharding import PartitionSpec as P
-
-    n_threads = mesh.shape["data"]
-    per = edges.shape[0] // n_threads
-    e = jnp.asarray(edges[: per * n_threads])
-    src_all, dst_all = e[:, 0], e[:, 1]
-    out_deg = jnp.maximum(jnp.zeros(n_vertices).at[src_all].add(1.0), 1.0)
-
-    def thread_proc(edges_loc, deg):
-        src, dst = edges_loc[:, 0], edges_loc[:, 1]
-
-        def body(ranks, _):
-            credits = accumulate(_credits(src, dst, ranks, deg, n_vertices),
-                                 "data", mode, k=k or None)
-            return (1 - DAMPING) / n_vertices + DAMPING * credits, None
-
-        ranks, _ = jax.lax.scan(body, jnp.full((n_vertices,), 1.0 / n_vertices),
-                                None, length=iters)
-        return ranks[None]
-
-    f = jax.jit(jax.shard_map(
-        thread_proc, mesh=mesh,
-        in_specs=(P("data", None), P(None)),
-        out_specs=P("data", None), check_vma=False))
-    ranks = f(e, out_deg)
-    return np.asarray(ranks[0])
+    """Deprecated shim: ``fit(backend="spmd")``."""
+    deprecated_entry("pagerank.fit_spmd", 'pagerank.fit(backend="spmd")')
+    sess = Session(backend=SpmdBackend(mesh=mesh))
+    ranks, _ = fit(edges, n_vertices, iters=iters, mode=mode, k=k or None,
+                   session=sess)
+    return ranks

@@ -1,17 +1,25 @@
 """STEP's primary contribution as composable JAX modules.
 
+- :mod:`repro.core.session` - the Table-1 facade: Session / SharedRef / backends
 - :mod:`repro.core.dsm` - GlobalStore distributed shared memory (fine/coarse)
 - :mod:`repro.core.accumulator` - DAddAccumulator (SPMD + host forms)
 - :mod:`repro.core.cache` - directory-based write-invalidate DSM cache
 - :mod:`repro.core.sync` - DBarrier / DSemaphore / SSP clock
 - :mod:`repro.core.threads` - DThread pool + shard_map SPMD adapter
 - :mod:`repro.core.addressing` - the 64-bit DSM address space
+- :mod:`repro.core.compat` - shims over moving JAX APIs (shard_map, meshes)
+
+Most programs need only :class:`~repro.core.session.Session`: it owns the
+store, cache, thread pool, sync controller and accumulator registry, and the
+same workload code runs on the host or SPMD backend.
 """
 
 from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate, accumulate_scatter, accumulate_tree
 from repro.core.addressing import AddressAllocator, make_address, split_address, watcher_node
 from repro.core.cache import DSMCache, CacheStats
+from repro.core.compat import axis_size, make_mesh, shard_map
 from repro.core.dsm import GlobalStore, PackSpec, pack_spec, pack_tree, unpack_tree
+from repro.core.session import Backend, HostBackend, Session, SharedRef, SpmdBackend
 from repro.core.sparse import blocked_topk_sparsify, densify, sparse_beneficial, topk_sparsify
 from repro.core.sync import DBarrier, DSemaphore, SSPClock
 from repro.core.threads import DThread, DThreadPool, ThreadState, spmd_threads
@@ -20,7 +28,9 @@ __all__ = [
     "AccumMode", "DAddAccumulator", "accumulate", "accumulate_scatter", "accumulate_tree",
     "AddressAllocator", "make_address", "split_address", "watcher_node",
     "DSMCache", "CacheStats",
+    "axis_size", "make_mesh", "shard_map",
     "GlobalStore", "PackSpec", "pack_spec", "pack_tree", "unpack_tree",
+    "Backend", "HostBackend", "Session", "SharedRef", "SpmdBackend",
     "blocked_topk_sparsify", "densify", "sparse_beneficial", "topk_sparsify",
     "DBarrier", "DSemaphore", "SSPClock",
     "DThread", "DThreadPool", "ThreadState", "spmd_threads",

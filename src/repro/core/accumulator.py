@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.addressing import align_up
+from repro.core.compat import axis_size as compat_axis_size
 from repro.core.sparse import blocked_topk_sparsify, densify, sparse_beneficial
 
 
@@ -52,12 +53,7 @@ class AccumMode(str, Enum):
 
 
 def _axis_size(axis) -> int:
-    if isinstance(axis, (tuple, list)):
-        s = 1
-        for a in axis:
-            s *= jax.lax.axis_size(a)
-        return s
-    return jax.lax.axis_size(axis)
+    return compat_axis_size(axis)
 
 
 def _pad_to(x: jax.Array, multiple: int) -> jax.Array:

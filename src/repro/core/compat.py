@@ -1,0 +1,58 @@
+"""Version-compatibility shims over the moving parts of the JAX API.
+
+The repo targets current JAX (``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``) but must also run on older releases
+where ``shard_map`` still lives in ``jax.experimental`` (with ``check_rep``
+instead of ``check_vma``) and meshes have no axis types.  Everything that
+builds a mesh or a shard_map goes through these two helpers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    _AxisType = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` maps onto the old API's ``check_rep`` (same role: verify
+    replication/varying-axis annotations; both default off here because the
+    accumulator's collectives produce deliberately replicated outputs).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def axis_size(axis) -> int:
+    """Static size of a named mesh axis (or tuple of axes) inside shard_map.
+
+    New JAX exposes ``jax.lax.axis_size``; on older releases ``psum(1, axis)``
+    is constant-folded to the same static integer.
+    """
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    if hasattr(jax.lax, "axis_size"):
+        n = 1
+        for a in axes:
+            n *= jax.lax.axis_size(a)
+        return n
+    return jax.lax.psum(1, tuple(axes))
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str], devices=None):
+    """``jax.make_mesh`` with Auto axis types where the installed jax has them."""
+    shape, names = tuple(shape), tuple(names)
+    if _AxisType is not None:
+        return jax.make_mesh(shape, names, devices=devices,
+                             axis_types=(_AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, names, devices=devices)

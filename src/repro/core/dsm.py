@@ -23,6 +23,7 @@ Three STEP concepts are kept first-class:
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
@@ -50,6 +51,10 @@ class GlobalEntry:
     sharding: Optional[NamedSharding]
     value: Any  # jax.Array | ShapeDtypeStruct (abstract mode)
     epoch: int = 0  # bumped on every Set — drives cache invalidation
+    # re-placement metadata: the declared spec (arrays) / per-field specs
+    # (objects), so Set/Inc restore the same NamedSharding they started with
+    spec: Optional[P] = None
+    field_specs: Optional[Dict[str, P]] = None
 
 
 class GlobalStore:
@@ -66,8 +71,10 @@ class GlobalStore:
         self.granularity = granularity
         self._alloc = AddressAllocator(coarse=(granularity == "coarse"))
         self._entries: Dict[str, GlobalEntry] = {}
+        self._lock = threading.Lock()  # serialises Inc (atomic by contract)
         # stats mirroring the paper's DSM throughput discussion
-        self.stats = {"get": 0, "set": 0, "bytes_get": 0, "bytes_set": 0, "transfers": 0}
+        self.stats = {"get": 0, "set": 0, "inc": 0,
+                      "bytes_get": 0, "bytes_set": 0, "transfers": 0}
 
     # -- declaration ----------------------------------------------------------
 
@@ -84,7 +91,8 @@ class GlobalStore:
         """``DefGlobal(NAME, TYPE)`` — declare a shared variable and set it."""
         value = jnp.asarray(value)
         slot = self._alloc.alloc_field(GLOBALS_OBJECT_ID, self._num_words(value.shape, value.dtype))
-        self._entries[name] = GlobalEntry(name, slot, self._sharding(spec), self._place(value, spec))
+        self._entries[name] = GlobalEntry(name, slot, self._sharding(spec),
+                                          self._place(value, spec), spec=spec)
         return name
 
     def new_array(self, name: str, shape, dtype=jnp.float32, *, spec: Optional[P] = None) -> str:
@@ -92,7 +100,8 @@ class GlobalStore:
         oid = self._alloc.new_object()
         slot = self._alloc.alloc_field(oid, self._num_words(shape, dtype))
         value = jnp.zeros(shape, dtype)
-        self._entries[name] = GlobalEntry(name, slot, self._sharding(spec), self._place(value, spec))
+        self._entries[name] = GlobalEntry(name, slot, self._sharding(spec),
+                                          self._place(value, spec), spec=spec)
         return name
 
     def new_object(self, name: str, fields: Dict[str, Any], *, specs: Optional[Dict[str, P]] = None) -> str:
@@ -106,7 +115,8 @@ class GlobalStore:
             words += self._num_words(fval.shape, fval.dtype)
             placed[fname] = self._place(fval, specs.get(fname))
         slot = self._alloc.alloc_field(oid, words)
-        self._entries[name] = GlobalEntry(name, slot, None, placed)
+        self._entries[name] = GlobalEntry(name, slot, None, placed,
+                                          field_specs=dict(specs))
         return name
 
     def delete(self, name: str) -> None:
@@ -130,7 +140,9 @@ class GlobalStore:
     def set(self, name: str, value, *, bump_epoch: bool = True) -> None:
         e = self._entries[name]
         if isinstance(e.value, dict):
-            e.value = {k: self._place(jnp.asarray(v), None) for k, v in value.items()}
+            specs = e.field_specs or {}
+            e.value = {k: self._place(jnp.asarray(v), specs.get(k))
+                       for k, v in value.items()}
         else:
             value = jnp.asarray(value)
             if e.sharding is not None:
@@ -152,11 +164,20 @@ class GlobalStore:
         return vals
 
     def inc(self, name: str, amount=1):
-        """Atomic increment (Table 1) — skips the cache layer by contract."""
-        e = self._entries[name]
-        e.value = jnp.asarray(e.value) + amount
-        e.epoch += 1
-        return e.value
+        """Atomic increment (Table 1) — skips the cache layer by contract.
+
+        Serialised under the store lock, re-placed with the entry's declared
+        spec (an incremented sharded entry keeps its NamedSharding), and
+        accounted in ``stats`` like any other DSM write.
+        """
+        with self._lock:
+            e = self._entries[name]
+            e.value = self._place(jnp.asarray(e.value) + amount, e.spec)
+            e.epoch += 1
+            self.stats["inc"] += 1
+            self.stats["bytes_set"] += _nbytes(e.value)
+            self.stats["transfers"] += self._transfer_count(e.value)
+            return e.value
 
     def epoch(self, name: str) -> int:
         return self._entries[name].epoch

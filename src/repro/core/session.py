@@ -1,0 +1,590 @@
+"""step.Session — the paper's Table 1 as ONE facade over DSM, threads and sync.
+
+STEP's pitch is a single coherent interface: DSM manipulation (DefGlobal /
+NewArray / NewObj / Get / Set / Inc / Accumulate), cluster & thread management
+(create / start / join / fail), and synchronization (barrier / semaphore /
+SSP clock).  This module is that interface.  A :class:`Session` owns the
+:class:`~repro.core.dsm.GlobalStore`, the directory-based DSM cache, the sync
+controller and the accumulator registry; shared data is declared through it
+and handled via typed :class:`SharedRef` handles instead of string-keyed store
+access at call sites.
+
+Workloads are written once against the facade::
+
+    sess = Session(backend="host", n_nodes=2, threads_per_node=2)
+    grad = sess.new_array("grad", (d,))
+
+    def thread_proc(ctx, xs, ys):          # ctx: tid / guard / barrier
+        theta = jnp.zeros((d,))
+        for _ in range(iters):
+            total = grad.accumulate(local_grad(theta, xs, ys))
+            theta = theta + lr * total
+        return theta
+
+    thetas = sess.run(thread_proc, data=(x, y))
+
+and execute unchanged on either substrate, selected at construction:
+
+* ``backend="host"`` — :class:`HostBackend`: the paper's programming model.
+  ``DThreadPool`` threads, blocking ``DAddAccumulator`` rounds, reads served
+  through the write-invalidate DSM cache, barrier-based release.
+* ``backend="spmd"`` — :class:`SpmdBackend`: one STEP thread per mesh position
+  via ``shard_map``.  ``SharedRef.accumulate`` lowers to the reduce-scatter /
+  all-gather collective schedule, ``SharedRef.get``/``set`` become the
+  per-trace replicated value, and barriers are implicit in the collectives.
+
+The bulk-synchronous contract shared by both backends: within ``thread_proc``,
+``ref.set(v)`` must be called with a value that is identical across threads
+(all threads re-derive the update from the accumulated total), which is what
+makes the host path's N redundant writes and the SPMD path's replicated
+update the same program.
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate as spmd_accumulate
+from repro.core.cache import DSMCache
+from repro.core.compat import make_mesh, shard_map
+from repro.core.dsm import GlobalStore
+from repro.core.sync import DBarrier, DSemaphore, SSPClock
+from repro.core.threads import DThreadPool, ThreadState
+from repro.data.pipeline import partition_rows
+
+
+# ---------------------------------------------------------------------------
+# Handles
+# ---------------------------------------------------------------------------
+
+
+class SharedRef:
+    """Typed handle to one piece of shared data in a session's DSM.
+
+    Table 1's access verbs live here: ``get``/``set``/``inc``/``accumulate``.
+    Outside a worker they hit the store directly; inside ``Session.spawn`` they
+    are routed through the active backend (cache-validated reads and blocking
+    accumulator rounds on the host; traced replicated values and collectives
+    under SPMD).
+    """
+
+    __slots__ = ("_session", "name")
+
+    def __init__(self, session: "Session", name: str):
+        self._session = session
+        self.name = name
+
+    def get(self):
+        """``Get`` — current value (cache-validated inside host workers)."""
+        return self._session._read(self.name)
+
+    def set(self, value) -> None:
+        """``Set`` — write-through + invalidate.  Inside a worker this is the
+        bulk-synchronous collective write: every thread passes the identical
+        re-derived value."""
+        self._session._write(self.name, value)
+
+    def inc(self, amount=1):
+        """``Inc`` — atomic increment; bypasses the cache layer (§5.1)."""
+        return self._session._inc(self.name, amount)
+
+    def accumulate(self, local, *, mode: Optional[AccumMode | str] = None,
+                   k: Optional[int] = None):
+        """``Accumulate`` — contribute this thread's vector, return the global
+        sum.  A synchronization point across all threads (§4.4)."""
+        return self._session._accumulate(self.name, local, mode, k)
+
+    def delete(self) -> None:
+        """``DelArray`` / ``DelObj``."""
+        self._session.store.delete(self.name)
+
+    @property
+    def address(self) -> int:
+        """64-bit DSM address (``object_id ++ field_id``)."""
+        return self._session.store.address(self.name)
+
+    @property
+    def epoch(self) -> int:
+        return self._session.store.epoch(self.name)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"SharedRef({self.name!r}, addr=0x{self.address:x})"
+
+    # paper-cased aliases
+    Get = get
+    Set = set
+    Inc = inc
+    Accumulate = accumulate
+
+
+# ---------------------------------------------------------------------------
+# Worker contexts (what thread_proc sees)
+# ---------------------------------------------------------------------------
+
+
+class HostWorkerCtx:
+    """One DThread's view of the session: identity, FT guard, barrier."""
+
+    def __init__(self, session: "Session", backend: "HostBackend", tid: int):
+        self._session = session
+        self._backend = backend
+        self.tid = tid
+        self.n_threads = backend.n_threads
+        self.node_id = tid // backend.pool.threads_per_node
+
+    def guard(self) -> None:
+        """Raise inside threads whose node was failed (checkpoint boundary)."""
+        self._backend.pool.checkpoint_guard(self.tid)
+
+    def barrier(self, timeout: Optional[float] = None) -> bool:
+        return self._backend.run_barrier.enter(timeout)
+
+    # -- ref-op routing ------------------------------------------------------
+
+    def read(self, name: str):
+        return self._session._cached_read(self.node_id, name)
+
+    def write(self, name: str, value) -> None:
+        self._session._cached_write(self.node_id, name, value)
+
+    def inc(self, name: str, amount):
+        with self._session._cache_lock:
+            return self._session.cache.atomic_inc(name, amount)
+
+    def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
+        accu = self._backend.accumulator(self._session, name, mode)
+        accu.accumulate(local)
+        return self.read(name)
+
+
+class SpmdWorkerCtx:
+    """The traced per-mesh-position view: shared refs are replicated values
+    threaded through the trace; barriers are the collectives themselves."""
+
+    def __init__(self, session: "Session", backend: "SpmdBackend", tid,
+                 values: Dict[str, Any]):
+        self._session = session
+        self._backend = backend
+        self.tid = tid
+        self.n_threads = backend.n_threads
+        self.node_id = tid
+        self.values = values
+
+    def guard(self) -> None:  # node failure is the FT layer's job under SPMD
+        return None
+
+    def barrier(self, timeout: Optional[float] = None) -> bool:
+        return True  # every collective is a barrier on this substrate
+
+    # -- ref-op routing ------------------------------------------------------
+
+    def read(self, name: str):
+        return self.values[name]
+
+    def write(self, name: str, value) -> None:
+        self.values[name] = jax.tree.map(jnp.asarray, value)
+
+    def inc(self, name: str, amount):
+        self.values[name] = jnp.asarray(self.values[name]) + amount
+        return self.values[name]
+
+    def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
+        total = spmd_accumulate(local, self._backend.axis, mode, k=k)
+        self.values[name] = total
+        self._backend.stats.account(mode, self.n_threads, int(local.shape[0]), k)
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Execution substrate behind a Session: place threads, run them, account
+    accumulator traffic.  Two implementations ship: :class:`HostBackend` and
+    :class:`SpmdBackend`."""
+
+    kind: str
+
+    @property
+    def n_threads(self) -> int: ...
+
+    @property
+    def n_nodes(self) -> int: ...
+
+    def spawn(self, session: "Session", thread_proc: Callable,
+              data: Sequence, broadcast: Sequence) -> None: ...
+
+    def join(self, session: "Session", timeout: Optional[float]) -> List[Any]: ...
+
+    def wire_traffic(self) -> int: ...
+
+
+class HostBackend:
+    """Today's paper-faithful path: DThreadPool + blocking DAddAccumulator."""
+
+    kind = "host"
+
+    def __init__(self, n_nodes: int = 2, threads_per_node: int = 2):
+        self.pool = DThreadPool(n_nodes, threads_per_node)
+        self.run_barrier = DBarrier(self.pool.n_threads)
+        self._accumulators: Dict[tuple, DAddAccumulator] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def n_threads(self) -> int:
+        return self.pool.n_threads
+
+    @property
+    def n_nodes(self) -> int:
+        return self.pool.n_nodes
+
+    def accumulator(self, session: "Session", name: str,
+                    mode: Optional[AccumMode] = None) -> DAddAccumulator:
+        """Registry: one accumulator per (output ref, mode), created on first
+        use — so per-call mode switches behave the same as on the SPMD path.
+        ``mode=None`` resolves to the ref's sole existing accumulator (the
+        common case for post-run inspection), else the session default."""
+        with self._lock:
+            if mode is None:
+                existing = [a for (n, _), a in self._accumulators.items() if n == name]
+                if len(existing) == 1:
+                    return existing[0]
+                mode = session.accum_mode
+            key = (name, AccumMode(mode))
+            accu = self._accumulators.get(key)
+            if accu is None:
+                accu = DAddAccumulator(session.store, name, self.n_threads,
+                                       self.n_nodes, key[1])
+                self._accumulators[key] = accu
+            return accu
+
+    def spawn(self, session: "Session", thread_proc: Callable,
+              data: Sequence, broadcast: Sequence) -> None:
+        n = self.n_threads
+
+        def entry(tid: int, _param):
+            lo_hi = [partition_rows(a.shape[0], tid, n) for a in data]
+            shards = [a[lo:hi] for a, (lo, hi) in zip(data, lo_hi)]
+            ctx = HostWorkerCtx(session, self, tid)
+            session._tls.ctx = ctx
+            try:
+                return thread_proc(ctx, *shards, *broadcast)
+            finally:
+                session._tls.ctx = None
+
+        self.pool.create_threads(entry)
+        self.pool.start_all()
+
+    def join(self, session: "Session", timeout: Optional[float] = None) -> List[Any]:
+        self.pool.join_all(timeout)
+        # a thread_proc that raised must not dissolve into a None result —
+        # surface the first failure (LOST threads are the FT layer's business)
+        failed = [t for t in self.pool.threads if t.state is ThreadState.FAILED]
+        if failed:
+            raise RuntimeError(
+                f"{len(failed)} session thread(s) failed; first: tid "
+                f"{failed[0].tid} on node {failed[0].node_id}") from failed[0].error
+        return [t.result for t in self.pool.threads]
+
+    def wire_traffic(self) -> int:
+        with self._lock:
+            return sum(a.bytes_transferred for a in self._accumulators.values())
+
+
+@dataclass
+class SpmdTraffic:
+    """Per-call traffic accounting for the SPMD accumulator, mirroring the
+    host accumulator's cost model.  Accounting happens at trace time, where
+    the data is unknown: ``sparse`` is costed at its top-k budget, and
+    ``auto`` at the dense figure — a true upper bound, since the runtime
+    branch only picks sparse when it is cheaper."""
+
+    bytes_transferred: int = 0
+    rounds: int = 0
+
+    def account(self, mode: AccumMode, n: int, vec_len: int, k: Optional[int]) -> None:
+        if mode == AccumMode.GATHER_ALL:
+            self.bytes_transferred += (2 * n + 1) * vec_len
+        elif mode == AccumMode.SPARSE:
+            self.bytes_transferred += 2 * (k or 0) * n + vec_len
+        else:  # REDUCE_SCATTER / HIERARCHICAL / AUTO (dense upper bound)
+            self.bytes_transferred += (n + 1) * vec_len
+        self.rounds += 1
+
+
+class SpmdBackend:
+    """The production path: one STEP thread per mesh position via shard_map.
+
+    ``spawn`` records the program; ``join`` traces ``thread_proc`` once (the
+    Python iteration loop unrolls into the jitted step), runs it over the
+    mesh, and writes final shared values back into the session's store so the
+    driver-side ``ref.get()`` sees the result exactly as it does on the host
+    backend.
+    """
+
+    kind = "spmd"
+
+    def __init__(self, mesh=None, axis: str = "data", n_threads: Optional[int] = None):
+        if mesh is None:
+            mesh = make_mesh((n_threads or len(jax.devices()),), (axis,))
+        if axis not in mesh.axis_names:
+            raise ValueError(f"mesh has axes {mesh.axis_names}, no {axis!r}")
+        self.mesh = mesh
+        self.axis = axis
+        self.stats = SpmdTraffic()
+        self._pending = None
+
+    @property
+    def n_threads(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_threads
+
+    def spawn(self, session: "Session", thread_proc: Callable,
+              data: Sequence, broadcast: Sequence) -> None:
+        if self._pending is not None:
+            raise RuntimeError("SPMD backend already has a spawned program; join() it first")
+        self._pending = (thread_proc, tuple(data), tuple(broadcast))
+
+    def join(self, session: "Session", timeout: Optional[float] = None) -> List[Any]:
+        if self._pending is None:
+            return []
+        thread_proc, data, broadcast = self._pending
+        self._pending = None
+        n = self.n_threads
+        # shard_map splits evenly: trim ragged rows (the host backend gives the
+        # remainder to low tids instead; parity holds whenever n divides rows).
+        data = tuple(a[: (a.shape[0] // n) * n] for a in data)
+        names = session.store.names()
+        shared0 = {m: session.store.get(m) for m in names}
+
+        def body(*args):
+            tid = jax.lax.axis_index(self.axis)
+            ctx = SpmdWorkerCtx(session, self, tid, dict(shared0))
+            session._tls.ctx = ctx
+            try:
+                result = thread_proc(ctx, *args)
+            finally:
+                session._tls.ctx = None
+            # stack every leaf along the mesh axis so out_specs is uniform
+            return jax.tree.map(lambda x: jnp.asarray(x)[None], (result, ctx.values))
+
+        in_specs = tuple(P(self.axis) for _ in data) + tuple(P() for _ in broadcast)
+        f = jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                              out_specs=P(self.axis), check_vma=False))
+        stacked_result, stacked_shared = f(*data, *broadcast)
+        for m in names:
+            session.store.set(m, jax.tree.map(lambda x: x[0], stacked_shared[m]))
+        return [jax.tree.map(lambda x, i=i: x[i], stacked_result) for i in range(n)]
+
+    def wire_traffic(self) -> int:
+        return self.stats.bytes_transferred
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """Table 1 as one object: DSM + cluster/thread management + sync.
+
+    Parameters
+    ----------
+    backend:
+        ``"host"`` | ``"spmd"`` | a :class:`Backend` instance.
+    n_nodes / threads_per_node:
+        Host-backend cluster shape (ignored for SPMD).
+    mesh / axis:
+        SPMD mesh (defaults to one thread per visible device on ``axis``).
+    accum_mode:
+        Default :class:`AccumMode` for ``SharedRef.accumulate``.
+    store:
+        Optionally adopt an existing :class:`GlobalStore` (FT recovery rolls
+        a new session onto the surviving store this way).
+    """
+
+    def __init__(self, backend: Backend | str = "host", *,
+                 n_nodes: int = 2, threads_per_node: int = 2,
+                 mesh=None, axis: str = "data",
+                 store: Optional[GlobalStore] = None,
+                 granularity: str = "coarse",
+                 accum_mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
+                 cache_capacity: int = 1024):
+        if isinstance(backend, str):
+            if backend == "host":
+                backend = HostBackend(n_nodes, threads_per_node)
+            elif backend == "spmd":
+                backend = SpmdBackend(mesh=mesh, axis=axis)
+            else:
+                raise ValueError(f"backend must be host|spmd, got {backend!r}")
+        self.backend = backend
+        self.store = store if store is not None else GlobalStore(granularity=granularity)
+        self.accum_mode = AccumMode(accum_mode)
+        self.cache = DSMCache(self.store, n_nodes=backend.n_nodes,
+                              capacity=cache_capacity)
+        self._cache_lock = threading.Lock()
+        self._tls = threading.local()
+
+    # -- Table 1: DSM manipulation --------------------------------------------
+
+    def def_global(self, name: str, value, *, spec=None) -> SharedRef:
+        """``DefGlobal`` — declare + initialise a shared variable."""
+        self.store.def_global(name, value, spec=spec)
+        return SharedRef(self, name)
+
+    def new_array(self, name: str, shape, dtype=jnp.float32, *, spec=None) -> SharedRef:
+        """``NewArray`` — allocate a zeroed shared array."""
+        self.store.new_array(name, shape, dtype, spec=spec)
+        return SharedRef(self, name)
+
+    def new_object(self, name: str, fields: Dict[str, Any], *, specs=None) -> SharedRef:
+        """``NewObj`` — a shared pytree of fields under one object_id."""
+        self.store.new_object(name, fields, specs=specs)
+        return SharedRef(self, name)
+
+    def ref(self, name: str) -> SharedRef:
+        """Handle to an already-declared name."""
+        if name not in self.store.names():
+            raise KeyError(name)
+        return SharedRef(self, name)
+
+    def names(self) -> List[str]:
+        return self.store.names()
+
+    def delete(self, name: str) -> None:
+        self.store.delete(name)
+
+    # -- Table 1: cluster & thread management ---------------------------------
+
+    def spawn(self, thread_proc: Callable, *, data: Sequence = (),
+              broadcast: Sequence = ()) -> None:
+        """Create + start one STEP thread per backend slot.
+
+        ``thread_proc(ctx, *data_shards, *broadcast)`` receives this thread's
+        contiguous row-partition of each array in ``data`` and every array in
+        ``broadcast`` whole (replicated).
+        """
+        data = tuple(jnp.asarray(a) for a in data)
+        broadcast = tuple(jnp.asarray(b) for b in broadcast)
+        self.backend.spawn(self, thread_proc, data, broadcast)
+
+    def join(self, timeout: Optional[float] = None) -> List[Any]:
+        """Join all threads; returns per-tid results."""
+        return self.backend.join(self, timeout)
+
+    def run(self, thread_proc: Callable, *, data: Sequence = (),
+            broadcast: Sequence = (), timeout: Optional[float] = None) -> List[Any]:
+        """``spawn`` + ``join``."""
+        self.spawn(thread_proc, data=data, broadcast=broadcast)
+        return self.join(timeout)
+
+    def kill_node(self, node_id: int) -> List[int]:
+        """Simulate a node failure (host backend); returns lost tids."""
+        if self.backend.kind != "host":
+            raise RuntimeError("node-failure simulation needs the host backend; "
+                               "SPMD recovery goes through ft.elastic_restore")
+        return self.backend.pool.kill_node(node_id)
+
+    def healthy_nodes(self) -> List[int]:
+        if self.backend.kind != "host":
+            return list(range(self.backend.n_nodes))
+        return self.backend.pool.healthy_nodes()
+
+    def thread_states(self) -> Dict[int, Any]:
+        if self.backend.kind != "host":
+            return {}
+        return self.backend.pool.states()
+
+    # -- Table 1: synchronization ---------------------------------------------
+
+    def barrier(self, count: Optional[int] = None) -> DBarrier:
+        """A counter barrier sized to the session's threads by default."""
+        return DBarrier(count or self.backend.n_threads)
+
+    def semaphore(self, count: int = 1) -> DSemaphore:
+        return DSemaphore(count)
+
+    def ssp_clock(self, staleness: int = 0, n_workers: Optional[int] = None) -> SSPClock:
+        return SSPClock(n_workers or self.backend.n_threads, staleness=staleness)
+
+    # -- accumulator registry / stats -----------------------------------------
+
+    def accumulator(self, name: str, mode: Optional[AccumMode | str] = None):
+        """The accumulator behind ``ref.accumulate`` (host backend)."""
+        if self.backend.kind != "host":
+            return self.backend.stats
+        return self.backend.accumulator(self, name,
+                                        AccumMode(mode) if mode else None)
+
+    def wire_traffic(self) -> int:
+        """Total accumulator wire traffic, in vector elements (paper §5.2)."""
+        return self.backend.wire_traffic()
+
+    def stats(self) -> Dict[str, Any]:
+        return {"store": dict(self.store.stats), "cache": self.cache.stats,
+                "wire_traffic": self.wire_traffic()}
+
+    # -- ref-op dispatch (driver vs active worker ctx) ------------------------
+
+    def _ctx(self):
+        return getattr(self._tls, "ctx", None)
+
+    def _read(self, name: str):
+        ctx = self._ctx()
+        return self.store.get(name) if ctx is None else ctx.read(name)
+
+    def _write(self, name: str, value) -> None:
+        ctx = self._ctx()
+        if ctx is None:
+            self.store.set(name, value)
+        else:
+            ctx.write(name, value)
+
+    def _inc(self, name: str, amount):
+        ctx = self._ctx()
+        return self.store.inc(name, amount) if ctx is None else ctx.inc(name, amount)
+
+    def _accumulate(self, name: str, local, mode, k):
+        ctx = self._ctx()
+        if ctx is None:
+            raise RuntimeError(
+                "SharedRef.accumulate is a collective across the session's "
+                "threads — call it inside a thread_proc run by Session.spawn")
+        return ctx.accumulate(name, jnp.asarray(local),
+                              AccumMode(mode) if mode is not None else self.accum_mode, k)
+
+    def _cached_read(self, node_id: int, name: str):
+        with self._cache_lock:
+            return self.cache.read(node_id, name)
+
+    def _cached_write(self, node_id: int, name: str, value) -> None:
+        with self._cache_lock:
+            self.cache.write(node_id, name, value)
+
+    # paper-cased aliases (Table 1)
+    DefGlobal = def_global
+    NewArray = new_array
+    NewObj = new_object
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"Session(backend={self.backend.kind}, "
+                f"threads={self.backend.n_threads}, names={self.names()})")
+
+
+def deprecated_entry(old: str, new: str) -> None:
+    """One-liner for the pre-Session entry points kept as shims."""
+    warnings.warn(f"{old} is deprecated; use {new}", DeprecationWarning,
+                  stacklevel=3)

@@ -24,6 +24,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import axis_size, shard_map
+
 
 class ThreadState(str, Enum):
     CREATED = "created"
@@ -161,8 +163,8 @@ def spmd_threads(
     def body(*local_args):
         tid = 0
         for name in axis_names:
-            tid = tid * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+            tid = tid * axis_size(name) + jax.lax.axis_index(name)
         return thread_proc(tid, *local_args)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=check_vma)
+    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=check_vma)

@@ -6,12 +6,14 @@ from repro.ft.checkpoint import (
     restore_checkpoint,
     save_checkpoint,
 )
-from repro.ft.elastic import RecoveryPlan, elastic_restore, plan_recovery, rebalance_batch, reshard_tree
+from repro.ft.elastic import (RecoveryPlan, elastic_restore, plan_recovery,
+                              rebalance_batch, reshard_tree, session_recovery)
 from repro.ft.heartbeat import HeartbeatMonitor
 
 __all__ = [
     "AsyncCheckpointer", "Checkpoint", "latest_step", "list_checkpoints",
     "restore_checkpoint", "save_checkpoint",
-    "RecoveryPlan", "elastic_restore", "plan_recovery", "rebalance_batch", "reshard_tree",
+    "RecoveryPlan", "elastic_restore", "plan_recovery", "rebalance_batch",
+    "reshard_tree", "session_recovery",
     "HeartbeatMonitor",
 ]

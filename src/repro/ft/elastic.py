@@ -53,6 +53,34 @@ def plan_recovery(failed_nodes: Sequence[int], all_nodes: Sequence[int],
     return RecoveryPlan(mode, reassignment, survivors)
 
 
+def session_recovery(session, failed_nodes: Sequence[int], mode: str = "multi",
+                     threads_per_node: Optional[int] = None):
+    """STEP §5.4 on the Session facade: plan the reassignment of a failed
+    node's threads and build a replacement host Session over the survivors.
+
+    The new session adopts the old session's :class:`GlobalStore`, which is
+    exactly the paper's "roll back to the latest DSM state": shared data
+    survives the node loss, only the thread placement changes.  ``single``
+    routes all lost threads to one survivor; ``multi`` round-robins them
+    (the faster option, Fig. 11).
+    """
+    from repro.core.session import HostBackend, Session
+
+    if session.backend.kind != "host":
+        raise ValueError("session_recovery drills node failure on the host "
+                         "backend; SPMD recovery goes through elastic_restore")
+    pool = session.backend.pool
+    tids_by_node = {n: [n * pool.threads_per_node + i
+                        for i in range(pool.threads_per_node)]
+                    for n in range(pool.n_nodes)}
+    plan = plan_recovery(failed_nodes, list(range(pool.n_nodes)),
+                         tids_by_node, mode=mode)
+    tpn = threads_per_node or pool.threads_per_node
+    new_session = Session(backend=HostBackend(len(plan.new_world), tpn),
+                          store=session.store, accum_mode=session.accum_mode)
+    return plan, new_session
+
+
 def reshard_tree(tree: Any, mesh: Mesh, specs: Any):
     """Place a host (or device) pytree onto `mesh` with `specs` (pytree or one P)."""
     if isinstance(specs, P) or specs is None:

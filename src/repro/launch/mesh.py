@@ -15,7 +15,9 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.core.compat import make_mesh
 
 
 def _mk(shape: Sequence[int], names: Sequence[str], devices=None) -> Mesh:
@@ -28,8 +30,7 @@ def _mk(shape: Sequence[int], names: Sequence[str], devices=None) -> Mesh:
             f"mesh {tuple(shape)} needs {n} devices, have {len(devices)} — "
             "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count "
             "before any jax import")
-    return jax.make_mesh(tuple(shape), tuple(names), devices=devices[:n],
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, names, devices=devices[:n])
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -173,6 +173,8 @@ def extract_metrics(compiled) -> dict:
     compiled artifact.  NOTE: XLA cost analysis counts a while/scan body ONCE,
     not × trip-count — the dry-run corrects via probe extrapolation."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns one dict per device
+        ca = ca[0] if ca else {}
     coll = collective_bytes_from_hlo(compiled.as_text())
     ma = compiled.memory_analysis()
     return {

@@ -24,6 +24,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import axis_size, shard_map
 from repro.models.common import dense_init
 
 
@@ -188,7 +189,7 @@ def _moe_ep_local(p_router, w_gate, w_up, w_down, x_m, cfg: MoEConfig, ep_axis: 
     tokens (the model-axis slice); expert weights are this device's E_loc
     experts.  Dispatch = all_to_all of capacity-padded per-expert buffers.
     """
-    M = jax.lax.axis_size(ep_axis)
+    M = axis_size(ep_axis)
     chunk, D = x_m.shape
     E = cfg.n_experts
     E_loc = E // M
@@ -268,7 +269,7 @@ def _moe_ep(p, x2d, cfg: MoEConfig):
         aux = jax.lax.pmean(aux, ep_axis)
         return y_loc, aux[None]
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(ep_axis, None, None), P(ep_axis, None, None),
                   P(ep_axis, None, None), P(dp, None)),

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.accumulator import accumulate_scatter
 from repro.core.addressing import align_up
+from repro.core.compat import axis_size as compat_axis_size
 from repro.core.dsm import PackSpec, pack_spec, pack_tree, unpack_tree
 from repro.optim.optimizers import Optimizer
 
@@ -65,11 +66,7 @@ def zero1_update(grads, state: Zero1State, opt: Optimizer, axis,
     Must run inside shard_map over `axis` (the data/"node" axis).  `grads` is
     this device's local gradient pytree (already averaged over its microbatch).
     """
-    n = jax.lax.axis_size(axis) if not isinstance(axis, (tuple, list)) else None
-    if n is None:
-        n = 1
-        for a in axis:
-            n *= jax.lax.axis_size(a)
+    n = compat_axis_size(axis)
 
     # (1) coarse-grained packing: one fused package-aligned buffer
     flat_g = pack_tree(grads, spec, dtype=jnp.float32)

@@ -1,6 +1,8 @@
 """DSM address space (paper §5.1)."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.addressing import (

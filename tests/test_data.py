@@ -1,6 +1,9 @@
 """Data pipeline: restart exactness + partition properties."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.data import LMDataPipeline, lm_batch, partition_rows

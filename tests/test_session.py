@@ -1,0 +1,176 @@
+"""step.Session facade: Table-1 handles, backend parity, DSM fixes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from conftest import run_subprocess_devices
+from repro.analytics import kmeans, logreg
+from repro.core import AccumMode, Session
+from repro.core.compat import make_mesh
+from repro.core.dsm import GlobalStore
+from repro.data import kmeans_dataset, logreg_dataset
+
+
+# -- Table-1 handle API -------------------------------------------------------
+
+
+def test_handles_def_get_set_inc():
+    sess = Session(backend="host")
+    x = sess.def_global("x", jnp.arange(4.0))
+    np.testing.assert_allclose(np.asarray(x.get()), [0, 1, 2, 3])
+    x.set(jnp.ones(4))
+    assert x.epoch == 1
+    np.testing.assert_allclose(np.asarray(x.inc(2.0)), 3.0)
+    arr = sess.new_array("a", (8,))
+    assert arr.get().shape == (8,)
+    obj = sess.new_object("o", {"w": jnp.ones((2, 2)), "b": jnp.zeros(2)})
+    assert set(obj.get()) == {"w", "b"}
+    assert x.address != arr.address
+    obj.delete()
+    with pytest.raises(KeyError):
+        sess.ref("o")
+
+
+def test_accumulate_outside_worker_is_an_error():
+    sess = Session(backend="host")
+    out = sess.new_array("out", (4,))
+    with pytest.raises(RuntimeError, match="collective"):
+        out.accumulate(jnp.ones(4))
+
+
+def test_spawn_accumulate_and_traffic_accounting():
+    sess = Session(backend="host", n_nodes=2, threads_per_node=2)
+    out = sess.new_array("out", (16,))
+
+    def proc(ctx):
+        total = out.accumulate(jnp.ones(16))
+        return float(total[0])
+
+    results = sess.run(proc)
+    assert results == [4.0] * 4
+    accu = sess.accumulator("out")
+    assert accu.bytes_transferred == (4 + 1) * 16   # (N+1)·V, paper §5.2
+    assert sess.wire_traffic() == (4 + 1) * 16
+    assert sess.stats()["cache"].hits + sess.stats()["cache"].misses >= 4
+
+
+def test_data_partitioning_and_broadcast():
+    sess = Session(backend="host", n_nodes=2, threads_per_node=2)
+    rows = jnp.arange(8.0)
+    shared = jnp.full((3,), 7.0)
+
+    def proc(ctx, shard, rep):
+        assert rep.shape == (3,)           # broadcast arrives whole
+        return (float(shard[0]), int(shard.shape[0]))
+
+    res = sess.run(proc, data=(rows,), broadcast=(shared,))
+    assert [r[1] for r in res] == [2, 2, 2, 2]
+    assert [r[0] for r in res] == [0.0, 2.0, 4.0, 6.0]
+
+
+def test_sync_factories():
+    sess = Session(backend="host", n_nodes=1, threads_per_node=3)
+    b = sess.barrier()
+    assert b.count == 3
+    c = sess.ssp_clock(staleness=1)
+    assert c.staleness == 1
+    s = sess.semaphore(2)
+    assert s.acquire() and s.acquire()
+    assert s.acquire(timeout=0.01) is False
+
+
+# -- backend parity (the acceptance criterion) --------------------------------
+
+
+def test_backend_parity_single_device():
+    """Same workload code, host vs SPMD session, matching results."""
+    x, y, _ = logreg_dataset(400, 24, seed=0)
+    th_host, _ = logreg.fit(x, y, backend="host", n_nodes=2,
+                            threads_per_node=2, iters=8)
+    th_spmd, spmd_sess = logreg.fit(x, y, backend="spmd", iters=8)
+    assert spmd_sess.backend.kind == "spmd"
+    np.testing.assert_allclose(th_spmd, th_host, rtol=1e-4, atol=1e-5)
+
+    xk, _, _ = kmeans_dataset(600, 8, 5, seed=1)
+    c_host, _ = kmeans.fit(xk, 5, backend="host", n_nodes=2,
+                           threads_per_node=2, iters=6, seed=1)
+    c_spmd, _ = kmeans.fit(xk, 5, backend="spmd", iters=6, seed=1)
+    np.testing.assert_allclose(c_spmd, c_host, rtol=1e-3, atol=1e-3)
+
+
+def test_backend_parity_multidevice():
+    """4-device SPMD session == 4-thread host session, same workload code."""
+    out = run_subprocess_devices("""
+import numpy as np
+from repro.analytics import kmeans, logreg, nmf, pagerank
+from repro.data import kmeans_dataset, logreg_dataset, nmf_dataset, powerlaw_graph
+
+x, y, _ = logreg_dataset(400, 24, seed=0)
+th_host, _ = logreg.fit(x, y, backend="host", n_nodes=2, threads_per_node=2, iters=8)
+th_spmd, sess = logreg.fit(x, y, backend="spmd", iters=8)
+assert sess.backend.n_threads == 4
+np.testing.assert_allclose(th_spmd, th_host, rtol=1e-4, atol=1e-5)
+
+xk, _, _ = kmeans_dataset(800, 8, 5, seed=1)
+c_host, _ = kmeans.fit(xk, 5, backend="host", n_nodes=2, threads_per_node=2, iters=6, seed=1)
+c_spmd, _ = kmeans.fit(xk, 5, backend="spmd", iters=6, seed=1)
+np.testing.assert_allclose(c_spmd, c_host, rtol=1e-3, atol=1e-3)
+
+r, _, _ = nmf_dataset(120, 32, 4, seed=2)
+p_h, q_h, _ = nmf.fit(r, 4, backend="host", n_nodes=2, threads_per_node=2, iters=8, seed=2)
+p_s, q_s, _ = nmf.fit(r, 4, backend="spmd", iters=8, seed=2)
+np.testing.assert_allclose(nmf.frob_loss(r, p_s, q_s), nmf.frob_loss(r, p_h, q_h), rtol=1e-2)
+
+edges = powerlaw_graph(300, 5, seed=3)
+r_h, _ = pagerank.fit(edges, 300, backend="host", n_nodes=2, threads_per_node=2,
+                      iters=8, mode="reduce_scatter")
+r_s, _ = pagerank.fit(edges, 300, backend="spmd", iters=8, mode="reduce_scatter")
+np.testing.assert_allclose(r_s, r_h, rtol=1e-4, atol=1e-6)
+print("PARITY_OK")
+""", n_devices=4)
+    assert "PARITY_OK" in out
+
+
+# -- GlobalStore satellite fixes ----------------------------------------------
+
+
+def test_store_inc_keeps_sharding_and_counts_stats():
+    mesh = make_mesh((1,), ("data",))
+    store = GlobalStore(mesh=mesh)
+    store.def_global("v", jnp.ones((4,)), spec=P("data"))
+    before = store.get("v").sharding
+    assert isinstance(before, NamedSharding)
+    store.inc("v", 1.0)
+    after = store._entries["v"].value
+    np.testing.assert_allclose(np.asarray(after), 2.0)
+    assert isinstance(after.sharding, NamedSharding)
+    assert after.sharding.spec == before.spec
+    assert store.stats["inc"] == 1
+    assert store.stats["bytes_set"] >= 16
+    assert store.stats["transfers"] >= 1
+
+
+def test_store_set_object_keeps_field_specs():
+    mesh = make_mesh((1,), ("data",))
+    store = GlobalStore(mesh=mesh)
+    store.new_object("o", {"w": jnp.ones((4,)), "b": jnp.zeros((2,))},
+                     specs={"w": P("data")})
+    store.set("o", {"w": jnp.full((4,), 2.0), "b": jnp.ones((2,))})
+    w = store._entries["o"].value["w"]
+    assert isinstance(w.sharding, NamedSharding)
+    assert w.sharding.spec == P("data")
+    np.testing.assert_allclose(np.asarray(w), 2.0)
+
+
+def test_ssp_inc_is_atomic_under_contention():
+    sess = Session(backend="host", n_nodes=4, threads_per_node=1)
+    counter = sess.def_global("counter", 0.0)
+
+    def proc(ctx):
+        for _ in range(50):
+            counter.inc(1.0)
+
+    sess.run(proc)
+    assert float(counter.get()) == 200.0

@@ -10,20 +10,20 @@ def test_accumulate_modes_spmd():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core import accumulate
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.core.compat import make_mesh, shard_map
+mesh = make_mesh((4, 2), ("data", "model"))
 V = 64
 x = jnp.arange(4 * V, dtype=jnp.float32).reshape(4, V)
 expect = np.sum(np.asarray(x), axis=0)
 for mode in ["gather_all", "reduce_scatter", "hierarchical"]:
-    f = jax.shard_map(lambda v: accumulate(v[0], "data", mode, inner_axis="data")[None],
-                      mesh=mesh, in_specs=P("data", None), out_specs=P("data", None), check_vma=False)
+    f = shard_map(lambda v: accumulate(v[0], "data", mode, inner_axis="data")[None],
+                  mesh=mesh, in_specs=P("data", None), out_specs=P("data", None), check_vma=False)
     np.testing.assert_allclose(np.asarray(jax.jit(f)(x))[0], expect, rtol=1e-6)
 xs = np.zeros((4, V), np.float32)
 for i in range(4): xs[i, i*3:i*3+2] = i + 1.0
 for mode, inp, exp in [("sparse", jnp.asarray(xs), xs.sum(0)), ("auto", x, expect)]:
-    f = jax.shard_map(lambda v: accumulate(v[0], "data", mode, k=8)[None],
-                      mesh=mesh, in_specs=P("data", None), out_specs=P("data", None), check_vma=False)
+    f = shard_map(lambda v: accumulate(v[0], "data", mode, k=8)[None],
+                  mesh=mesh, in_specs=P("data", None), out_specs=P("data", None), check_vma=False)
     np.testing.assert_allclose(np.asarray(jax.jit(f)(inp))[0], exp, rtol=1e-6)
 print("SPMD_ACCUM_OK")
 """)
@@ -36,7 +36,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.optim import adamw, zero1_init, zero1_update
 from repro.core.dsm import pack_spec
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core.compat import axis_size, make_mesh, shard_map
+mesh = make_mesh((8,), ("data",))
 params = {"w": jnp.ones((13, 7), jnp.bfloat16), "b": jnp.zeros((5,), jnp.bfloat16)}
 spec = pack_spec(params)
 opt = adamw(lr=0.1, weight_decay=0.0)
@@ -48,10 +49,10 @@ ref = jax.tree.map(lambda p, u: p.astype(jnp.float32) + u, params, upd)
 gstack = jax.tree.map(lambda *g: jnp.stack(g), *grads)
 def step(gs):
     g = jax.tree.map(lambda x: x[0], gs)
-    zst = zero1_init(params, opt, jax.lax.axis_size("data"), jax.lax.axis_index("data"), spec)
+    zst = zero1_init(params, opt, axis_size("data"), jax.lax.axis_index("data"), spec)
     newp, _ = zero1_update(g, zst, opt, "data", spec)
     return jax.tree.map(lambda x: x[None], newp)
-f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False))
+f = jax.jit(shard_map(step, mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False))
 got = jax.tree.map(lambda x: np.asarray(x[0], np.float32), f(gstack))
 for k in ("w", "b"):
     np.testing.assert_allclose(got[k], np.asarray(ref[k]), rtol=2e-2, atol=2e-2)
@@ -85,7 +86,8 @@ def test_compressed_accumulate_error_feedback():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.optim import compressed_accumulate, ef_init
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core.compat import make_mesh, shard_map
+mesh = make_mesh((4,), ("data",))
 V, k = 512, 64
 rng = np.random.default_rng(0)
 g = jnp.asarray(rng.normal(size=(4, V)), jnp.float32)
@@ -93,8 +95,8 @@ def step(gs):
     ef = ef_init(V)
     total, ef2 = compressed_accumulate(gs[0], ef, "data", k)
     return total[None], ef2.residual[None]
-f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=P("data", None),
-                          out_specs=(P("data", None), P("data", None)), check_vma=False))
+f = jax.jit(shard_map(step, mesh=mesh, in_specs=P("data", None),
+                      out_specs=(P("data", None), P("data", None)), check_vma=False))
 total, resid = f(g)
 # per-device identity: sent + residual = corrected
 print("EF_OK", float(jnp.sum(jnp.abs(total))) > 0)

@@ -70,3 +70,99 @@ def test_ssp_drop_worker_unblocks():
     assert c.wait(0, timeout=0.05) is False
     c.drop_worker(1)
     assert c.wait(0, timeout=1)
+
+
+def test_ssp_drop_worker_releases_concurrent_waiters():
+    """FT: several waiters blocked on one straggler must ALL release when the
+    straggler's node is declared dead (no survivor left hanging)."""
+    c = SSPClock(4, staleness=0)
+    released = []
+
+    def fast(tid):
+        c.tick(tid)
+        assert c.wait(tid, timeout=5)
+        released.append(tid)
+
+    ts = [threading.Thread(target=fast, args=(i,)) for i in (0, 1, 2)]
+    [t.start() for t in ts]
+    time.sleep(0.1)
+    assert released == []            # everyone blocked on worker 3
+    c.drop_worker(3)                 # heartbeat declares it dead
+    [t.join(5) for t in ts]
+    assert sorted(released) == [0, 1, 2]
+    assert c.min_clock() == 1
+
+
+def test_ssp_add_worker_rejoins_at_min_clock_and_is_waited_on():
+    """FT: a replacement worker enters at the min clock and immediately
+    participates in the staleness bound — survivors block on it again."""
+    c = SSPClock(2, staleness=0)
+    c.tick(0)
+    c.drop_worker(1)
+    assert c.wait(0, timeout=1)      # alone, nothing to wait for
+    c.add_worker(2)                  # replacement thread (new tid)
+    assert c._clocks[2] == c.min_clock() == 1
+
+    blocked = threading.Event()
+    done = threading.Event()
+
+    def ahead():
+        c.tick(0)
+        blocked.set()
+        assert c.wait(0, timeout=5)
+        done.set()
+
+    t = threading.Thread(target=ahead)
+    t.start()
+    blocked.wait(5)
+    time.sleep(0.05)
+    assert not done.is_set()         # blocked on the rejoined worker
+    c.tick(2)
+    t.join(5)
+    assert done.is_set()
+
+
+def test_semaphore_timeout_removes_fifo_ticket():
+    """FT: a waiter that times out must leave the FIFO queue, otherwise its
+    stale head ticket starves every later waiter."""
+    s = DSemaphore(0)
+    got = {}
+
+    def short():
+        got["short"] = s.acquire(timeout=0.1)
+
+    def long():
+        got["long"] = s.acquire(timeout=5)
+
+    t1 = threading.Thread(target=short)
+    t1.start()
+    time.sleep(0.03)                 # short is queued first (FIFO head)
+    t2 = threading.Thread(target=long)
+    t2.start()
+    t1.join(5)
+    assert got["short"] is False     # timed out, ticket withdrawn
+    s.release()                      # must wake `long`, not the dead head
+    t2.join(5)
+    assert got["long"] is True
+    assert len(s._queue) == 0
+
+
+def test_semaphore_timeout_mid_queue_preserves_fifo_order():
+    s = DSemaphore(0)
+    order = []
+
+    def waiter(name, timeout):
+        if s.acquire(timeout=timeout):
+            order.append(name)
+
+    threads = []
+    for name, timeout in (("a", 5), ("dead", 0.1), ("b", 5)):
+        t = threading.Thread(target=waiter, args=(name, timeout))
+        t.start()
+        threads.append(t)
+        time.sleep(0.03)             # enforce queue order a < dead < b
+    time.sleep(0.15)                 # "dead" times out mid-queue
+    s.release()
+    s.release()
+    [t.join(5) for t in threads]
+    assert order == ["a", "b"]
