@@ -2,8 +2,10 @@
 
 GENE/LRS/KMS/FOREST/NMFS/LJ-scale datasets are shrunk to CPU-bench size but
 keep the papers' sweep structure: running time vs #iterations and vs
-#threads, per application.  All workloads run through the `step.Session`
-facade on the host backend; the derived column records the sweep point + the
+#threads, per application.  All workloads iterate via ``ctx.iterate`` through
+the `step.Session` facade — host backend for the paper sweeps, plus an SPMD
+sweep where the loop lowers to one ``lax.scan`` (so rising iters should cost
+runtime, not compile time).  The derived column records the sweep point + the
 quality metric so regressions in either speed or convergence are visible.
 """
 
@@ -72,11 +74,23 @@ def bench_pagerank():
         emit(f"pagerank_threads{threads}", us, "iters=10")
 
 
+def bench_spmd_scan():
+    """The scan path end-to-end: wall time vs iters on the SPMD backend."""
+    x, y, _ = logreg_dataset(2000, 128, seed=0)
+    for iters in (8, 64):
+        us = timeit(lambda: logreg.fit(x, y, backend="spmd", iters=iters,
+                                       lr=1e-3), iters=2)
+        theta, _ = logreg.fit(x, y, backend="spmd", iters=iters, lr=1e-3)
+        emit(f"logreg_spmd_scan_iters{iters}", us,
+             f"loss={logreg.loss(theta, x, y):.4f}")
+
+
 def main():
     bench_logreg()
     bench_kmeans()
     bench_nmf()
     bench_pagerank()
+    bench_spmd_scan()
 
 
 if __name__ == "__main__":

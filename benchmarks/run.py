@@ -21,6 +21,7 @@ BENCHES = [
     ("apps", "benchmarks.bench_apps"),                      # Figs. 4–10
     ("fault_tolerance", "benchmarks.bench_fault_tolerance"),  # Fig. 11
     ("kernels", "benchmarks.bench_kernels"),                # Pallas μs/call
+    ("compile", "benchmarks.bench_compile"),                # ctx.iterate O(1) claim
 ]
 
 

@@ -3,8 +3,9 @@
 Shows the paper's sparse/auto accumulator decision in action: threads owning
 edges with concentrated destinations produce sparse credit vectors, and the
 ``auto`` mode ships (index, value) pairs only when cheaper.  Everything runs
-through the Session facade — swap ``backend="spmd"`` to put the same workload
-on a device mesh.
+through the Session facade with the iteration written via ``ctx.iterate`` —
+swap ``backend="spmd"`` to put the same workload on a device mesh, where the
+loop lowers to one ``lax.scan`` instead of unrolling.
 
     PYTHONPATH=src python examples/pagerank_graph.py
 """

@@ -6,13 +6,17 @@ One `Session` object is the whole Table-1 API: shared state is declared with
 ``session.run``, and the *same* workload code executes on the host backend
 (paper-faithful DThreads + blocking accumulator) or the SPMD backend
 (shard_map over a device mesh) — pick one at ``Session(backend=...)``.
-The script declares shared state, runs the paper's worked example
-(distributed multi-threaded logistic regression) on both backends, then
-trains a tiny LM end-to-end through the production step builder.
+Per-thread loops are written with ``ctx.iterate(step, carry, iters)``: a
+guarded Python loop on the host backend, a single ``lax.scan`` under SPMD
+(compile time O(1) in ``iters``).  The script declares shared state, runs a
+tiny ``ctx.iterate`` program and the paper's worked example (distributed
+multi-threaded logistic regression) on both backends, then trains a tiny LM
+end-to-end through the production step builder.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.analytics import logreg
@@ -27,6 +31,18 @@ def main():
     grad = sess.new_array("grad", (32,))
     print(f"DSM declared: {sess.names()}, grad addr=0x{grad.address:x}, "
           f"step_size={float(step_size.get()):g}")
+
+    # 1b. the iteration engine: one logical loop, two lowerings — a guarded
+    # Python loop here on the host backend, one lax.scan under SPMD.
+    total = sess.new_array("total", ())
+
+    def count_rounds(ctx):
+        return ctx.iterate(lambda c: c + total.accumulate(jnp.float32(1.0)),
+                           jnp.float32(0.0), 5)
+
+    per_thread = sess.run(count_rounds)
+    print(f"ctx.iterate: 5 rounds x {sess.backend.n_threads} threads -> "
+          f"carry {float(per_thread[0]):g} per thread")
 
     # 2. the paper's §4.5 example on BOTH backends — same thread_proc
     x, y, _ = logreg_dataset(n_rows=800, n_features=32, seed=0)

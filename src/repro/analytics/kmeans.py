@@ -66,15 +66,14 @@ def fit(x, k: int, *, iters: int = 10, seed: int = 0,
         "centers", jnp.asarray(x[rng.choice(x.shape[0], k, replace=False)]))
     partials = sess.new_array("partials", (k * (d + 1),))
 
+    if use_kernel:
+        from repro.kernels.kmeans_assign.ops import kmeans_assign as assign_fn
+    else:
+        assign_fn = _assign
+
     def thread_proc(ctx, pts):
-        for _ in range(iters):
-            ctx.guard()
-            c = centers.get()
-            if use_kernel:
-                from repro.kernels.kmeans_assign.ops import kmeans_assign
-                a, _dist = kmeans_assign(pts, c)
-            else:
-                a, _dist = _assign(pts, c)
+        def step(_):                       # the shared centers carry the state
+            a, _dist = assign_fn(pts, centers.get())
             sums, counts = _partials(pts, a, k)
             flat = partials.accumulate(
                 jnp.concatenate([sums.reshape(-1), counts]), mode=mode)
@@ -82,6 +81,8 @@ def fit(x, k: int, *, iters: int = 10, seed: int = 0,
             counts_g = flat[k * d:]
             # §4.5 pattern: every thread re-derives the identical center update
             centers.set(sums_g / jnp.maximum(counts_g[:, None], 1.0))
+            return _
+        ctx.iterate(step, None, iters)
         return None
 
     sess.run(thread_proc, data=(jnp.asarray(x),))

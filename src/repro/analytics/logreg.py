@@ -63,13 +63,13 @@ def fit(x, y, *, iters: int = 10, lr: float = 1e-3,
     grad = sess.new_array("grad", (d,))
 
     def thread_proc(ctx, xs, ys):
-        theta = jnp.zeros((d,), jnp.float32)          # local copy (paper line 10)
-        for _ in range(iters):
-            ctx.guard()
+        def step(theta):                              # one synchronous round
             local = _local_grad(theta, xs, ys)        # lines 14–21
             total = grad.accumulate(local, mode=mode, k=k)  # line 22 (sync point)
-            theta = theta + lr * total                # lines 23–24
-        return theta
+            return theta + lr * total                 # lines 23–24
+        # local theta (paper line 10) is the carry; host: guarded loop,
+        # SPMD: one lax.scan — O(1) lowered program size in `iters`.
+        return ctx.iterate(step, jnp.zeros((d,), jnp.float32), iters)
 
     thetas = sess.run(thread_proc, data=(jnp.asarray(x), jnp.asarray(y)))
     return np.asarray(thetas[0]), sess
@@ -90,11 +90,14 @@ def fit_ssp(x, y, *, n_workers: int = 4, staleness: int = 1, iters: int = 10,
     clock = sess.ssp_clock(staleness)
 
     def worker(ctx, xs, ys):
-        for _ in range(iters):
+        def step(_):
             g = _local_grad(theta.get(), xs, ys)   # possibly stale replica
             theta.inc(lr * g)                      # atomic DSM update
             clock.tick(ctx.tid)
             clock.wait(ctx.tid)                    # bounded staleness
+            return _
+        ctx.iterate(step, None, iters)             # host-only: clock is a
+                                                   # Python-side effect
 
     sess.run(worker, data=(jnp.asarray(x), jnp.asarray(y)), timeout=60)
     return np.asarray(theta.get()), clock

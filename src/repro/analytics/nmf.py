@@ -67,17 +67,17 @@ def fit(r, k: int, *, iters: int = 10, seed: int = 0,
     q_partials = sess.new_array("q_partials", (k * m + k * k,))
 
     def thread_proc(ctx, r_loc, p_loc):
-        for _ in range(iters):
-            ctx.guard()
+        def step(p):                        # thread-local P rides in the carry
             q = Q.get()
-            p_loc = _update_p(p_loc, q, r_loc)
-            numer, gram = _q_partials(p_loc, r_loc)
+            p = _update_p(p, q, r_loc)
+            numer, gram = _q_partials(p, r_loc)
             flat = q_partials.accumulate(
                 jnp.concatenate([numer.reshape(-1), gram.reshape(-1)]), mode=mode)
             numer_g = flat[: k * m].reshape(k, m)
             gram_g = flat[k * m:].reshape(k, k)
             Q.set(q * numer_g / (gram_g @ q + _EPS))
-        return p_loc
+            return p
+        return ctx.iterate(step, p_loc, iters)
 
     ps = sess.run(thread_proc, data=(jnp.asarray(r), jnp.asarray(p_full0)))
     p_full = np.concatenate([np.asarray(p) for p in ps], axis=0)

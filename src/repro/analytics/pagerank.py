@@ -63,12 +63,13 @@ def fit(edges, n_vertices: int, *, iters: int = 10,
 
     def thread_proc(ctx, edges_loc, deg):
         src, dst = edges_loc[:, 0], edges_loc[:, 1]
-        for _ in range(iters):
-            ctx.guard()
-            r = ranks.get()
+
+        def step(_):                       # the shared ranks carry the state
             total = credits.accumulate(
-                _credits(src, dst, r, deg, n_vertices), mode=mode, k=k)
+                _credits(src, dst, ranks.get(), deg, n_vertices), mode=mode, k=k)
             ranks.set((1 - DAMPING) / n_vertices + DAMPING * total)
+            return _
+        ctx.iterate(step, None, iters)
         return None
 
     sess.run(thread_proc, data=(jnp.asarray(edges),), broadcast=(out_deg,))

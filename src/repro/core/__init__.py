@@ -17,9 +17,9 @@ same workload code runs on the host or SPMD backend.
 from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate, accumulate_scatter, accumulate_tree
 from repro.core.addressing import AddressAllocator, make_address, split_address, watcher_node
 from repro.core.cache import DSMCache, CacheStats
-from repro.core.compat import axis_size, make_mesh, shard_map
+from repro.core.compat import axis_size, cost_analysis, make_mesh, shard_map
 from repro.core.dsm import GlobalStore, PackSpec, pack_spec, pack_tree, unpack_tree
-from repro.core.session import Backend, HostBackend, Session, SharedRef, SpmdBackend
+from repro.core.session import Backend, HostBackend, Session, SharedRef, SpmdBackend, WorkerCtx
 from repro.core.sparse import blocked_topk_sparsify, densify, sparse_beneficial, topk_sparsify
 from repro.core.sync import DBarrier, DSemaphore, SSPClock
 from repro.core.threads import DThread, DThreadPool, ThreadState, spmd_threads
@@ -28,9 +28,9 @@ __all__ = [
     "AccumMode", "DAddAccumulator", "accumulate", "accumulate_scatter", "accumulate_tree",
     "AddressAllocator", "make_address", "split_address", "watcher_node",
     "DSMCache", "CacheStats",
-    "axis_size", "make_mesh", "shard_map",
+    "axis_size", "cost_analysis", "make_mesh", "shard_map",
     "GlobalStore", "PackSpec", "pack_spec", "pack_tree", "unpack_tree",
-    "Backend", "HostBackend", "Session", "SharedRef", "SpmdBackend",
+    "Backend", "HostBackend", "Session", "SharedRef", "SpmdBackend", "WorkerCtx",
     "blocked_topk_sparsify", "densify", "sparse_beneficial", "topk_sparsify",
     "DBarrier", "DSemaphore", "SSPClock",
     "DThread", "DThreadPool", "ThreadState", "spmd_threads",

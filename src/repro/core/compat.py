@@ -49,6 +49,22 @@ def axis_size(axis) -> int:
     return jax.lax.psum(1, tuple(axes))
 
 
+def cost_analysis(compiled) -> dict:
+    """Normalised ``compiled.cost_analysis()``: one flat dict of metrics.
+
+    Newer JAX returns the dict directly; older releases return a one-element
+    list of dicts (one per computation); some backends return ``None`` or
+    raise.  Callers always get a plain dict (possibly empty).
+    """
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:  # pragma: no cover - backend-dependent
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def make_mesh(shape: Sequence[int], names: Sequence[str], devices=None):
     """``jax.make_mesh`` with Auto axis types where the installed jax has them."""
     shape, names = tuple(shape), tuple(names)

@@ -14,12 +14,11 @@ Workloads are written once against the facade::
     sess = Session(backend="host", n_nodes=2, threads_per_node=2)
     grad = sess.new_array("grad", (d,))
 
-    def thread_proc(ctx, xs, ys):          # ctx: tid / guard / barrier
-        theta = jnp.zeros((d,))
-        for _ in range(iters):
+    def thread_proc(ctx, xs, ys):          # ctx: tid / guard / iterate
+        def step(theta):                   # one synchronous round
             total = grad.accumulate(local_grad(theta, xs, ys))
-            theta = theta + lr * total
-        return theta
+            return theta + lr * total
+        return ctx.iterate(step, jnp.zeros((d,)), iters)
 
     thetas = sess.run(thread_proc, data=(x, y))
 
@@ -38,6 +37,14 @@ The bulk-synchronous contract shared by both backends: within ``thread_proc``,
 (all threads re-derive the update from the accumulated total), which is what
 makes the host path's N redundant writes and the SPMD path's replicated
 update the same program.
+
+Iteration is a framework primitive, not a Python loop: ``ctx.iterate(step,
+carry, iters)`` (and the indexed ``ctx.fori``) runs one *logical* loop with
+two lowerings — a plain ``ctx.guard()``-per-round loop on the host backend,
+and a single ``lax.scan`` on the SPMD backend, so the lowered program (and
+compile time) is O(1) in ``iters`` instead of O(iters) unrolled HLO.  The
+shared-value dict is threaded through the scan carry, which is what keeps
+``SharedRef.get/set/accumulate`` legal inside the step body.
 """
 
 from __future__ import annotations
@@ -129,15 +136,72 @@ class SharedRef:
 # ---------------------------------------------------------------------------
 
 
-class HostWorkerCtx:
-    """One DThread's view of the session: identity, FT guard, barrier."""
+class WorkerCtx:
+    """One STEP thread's view of the session: identity, sync, ref-op routing,
+    and the iteration engine.
+
+    Subclasses plug in the transport (``read``/``write``/``inc``/
+    ``accumulate``) and the physical lowering of :meth:`fori`; everything a
+    ``thread_proc`` calls is declared here, so workload code is written once
+    against this contract and runs on either backend.
+    """
+
+    def __init__(self, session: "Session", tid, n_threads: int, node_id):
+        self._session = session
+        self.tid = tid
+        self.n_threads = n_threads
+        self.node_id = node_id
+
+    # -- sync ----------------------------------------------------------------
+
+    def guard(self) -> None:
+        """Checkpoint boundary: raise inside threads whose node was failed.
+        A no-op where node failure is handled below this layer."""
+        return None
+
+    def barrier(self, timeout: Optional[float] = None) -> bool:
+        return True
+
+    # -- iteration engine ----------------------------------------------------
+
+    def iterate(self, step: Callable, carry, iters: int):
+        """Run ``carry = step(carry)`` for ``iters`` synchronous rounds.
+
+        The canonical per-thread loop: one *logical* construct with two
+        physical lowerings (a guarded Python loop on the host backend, one
+        ``lax.scan`` under SPMD — O(1) lowered program size in ``iters``).
+        ``SharedRef.get/set/accumulate`` are legal inside ``step``; the carry
+        must be a pytree of fixed shape/dtype across rounds (or ``None``).
+        """
+        return self.fori(lambda i, c: step(c), carry, iters)
+
+    def fori(self, step: Callable, carry, iters: int):
+        """Indexed variant: ``carry = step(i, carry)`` for i in [0, iters)."""
+        raise NotImplementedError
+
+    # -- ref-op routing (transport is backend-specific) ----------------------
+
+    def read(self, name: str):
+        raise NotImplementedError
+
+    def write(self, name: str, value) -> None:
+        raise NotImplementedError
+
+    def inc(self, name: str, amount):
+        raise NotImplementedError
+
+    def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
+        raise NotImplementedError
+
+
+class HostWorkerCtx(WorkerCtx):
+    """One DThread's view: cache-validated reads, blocking accumulator rounds,
+    and a plain ``guard()``-per-round iteration loop."""
 
     def __init__(self, session: "Session", backend: "HostBackend", tid: int):
-        self._session = session
+        super().__init__(session, tid, backend.n_threads,
+                         tid // backend.pool.threads_per_node)
         self._backend = backend
-        self.tid = tid
-        self.n_threads = backend.n_threads
-        self.node_id = tid // backend.pool.threads_per_node
 
     def guard(self) -> None:
         """Raise inside threads whose node was failed (checkpoint boundary)."""
@@ -145,6 +209,14 @@ class HostWorkerCtx:
 
     def barrier(self, timeout: Optional[float] = None) -> bool:
         return self._backend.run_barrier.enter(timeout)
+
+    # -- iteration: the paper's programming model, round by round ------------
+
+    def fori(self, step: Callable, carry, iters: int):
+        for i in range(int(iters)):
+            self.guard()
+            carry = step(i, carry)
+        return carry
 
     # -- ref-op routing ------------------------------------------------------
 
@@ -164,24 +236,47 @@ class HostWorkerCtx:
         return self.read(name)
 
 
-class SpmdWorkerCtx:
+class SpmdWorkerCtx(WorkerCtx):
     """The traced per-mesh-position view: shared refs are replicated values
     threaded through the trace; barriers are the collectives themselves."""
 
     def __init__(self, session: "Session", backend: "SpmdBackend", tid,
                  values: Dict[str, Any]):
-        self._session = session
+        super().__init__(session, tid, backend.n_threads, tid)
         self._backend = backend
-        self.tid = tid
-        self.n_threads = backend.n_threads
-        self.node_id = tid
         self.values = values
+        self._accum_repeat = 1  # trip-count multiplier for traffic accounting
 
-    def guard(self) -> None:  # node failure is the FT layer's job under SPMD
-        return None
+    # -- iteration: one lax.scan, O(1) lowered size in `iters` ---------------
 
-    def barrier(self, timeout: Optional[float] = None) -> bool:
-        return True  # every collective is a barrier on this substrate
+    def fori(self, step: Callable, carry, iters: int):
+        iters = int(iters)
+        if iters <= 0:
+            return carry
+        # The shared-value dict rides in the scan carry: ref.get/set/accumulate
+        # inside `step` read and write the scanned copy, so shared state
+        # advances per round exactly as it does on the host backend.
+        values0 = jax.tree.map(jnp.asarray, dict(self.values))
+        carry0 = jax.tree.map(jnp.asarray, carry)
+
+        def body(state, i):
+            inner_carry, values = state
+            outer_values, self.values = self.values, dict(values)
+            outer_repeat = self._accum_repeat
+            self._accum_repeat = outer_repeat * iters  # nested loops compose
+            try:
+                new_carry = step(i, inner_carry)
+                new_values = dict(self.values)
+            finally:
+                self.values = outer_values
+                self._accum_repeat = outer_repeat
+            return (new_carry, new_values), None
+
+        (carry, values), _ = jax.lax.scan(body, (carry0, values0),
+                                          jnp.arange(iters))
+        self.values.clear()
+        self.values.update(values)
+        return carry
 
     # -- ref-op routing ------------------------------------------------------
 
@@ -196,10 +291,25 @@ class SpmdWorkerCtx:
         return self.values[name]
 
     def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
-        total = spmd_accumulate(local, self._backend.axis, mode, k=k)
+        vec = local if local.ndim else local[None]   # collectives want rank>=1
+        total = spmd_accumulate(vec, self._backend.axis, mode, k=k)
+        if not local.ndim:
+            total = total[0]
         self.values[name] = total
-        self._backend.stats.account(mode, self.n_threads, int(local.shape[0]), k)
+        self._backend.stats.account(mode, self.n_threads, int(local.size), k,
+                                    repeat=self._accum_repeat)
         return total
+
+
+def _warn_at_caller(message: str, category) -> None:
+    """Warn with the first stack frame *outside this module* as the location,
+    so run/join/lower entry paths all attribute to the user's call site."""
+    import sys
+    level, frame = 2, sys._getframe(1)
+    while frame is not None and frame.f_globals.get("__name__") == __name__:
+        frame = frame.f_back
+        level += 1
+    warnings.warn(message, category, stacklevel=level)
 
 
 # ---------------------------------------------------------------------------
@@ -312,24 +422,32 @@ class SpmdTraffic:
     bytes_transferred: int = 0
     rounds: int = 0
 
-    def account(self, mode: AccumMode, n: int, vec_len: int, k: Optional[int]) -> None:
+    def account(self, mode: AccumMode, n: int, vec_len: int, k: Optional[int],
+                *, repeat: int = 1) -> None:
+        """Charge one accumulate call site.  ``vec_len`` is the total element
+        count of the local contribution (scalars cost 1, like the host
+        accumulator).  ``repeat`` multiplies by the trip count when the call
+        site sits inside ``ctx.iterate`` — the scan body is traced once but
+        executes ``iters`` rounds."""
         if mode == AccumMode.GATHER_ALL:
-            self.bytes_transferred += (2 * n + 1) * vec_len
+            per_round = (2 * n + 1) * vec_len
         elif mode == AccumMode.SPARSE:
-            self.bytes_transferred += 2 * (k or 0) * n + vec_len
+            per_round = 2 * (k or 0) * n + vec_len
         else:  # REDUCE_SCATTER / HIERARCHICAL / AUTO (dense upper bound)
-            self.bytes_transferred += (n + 1) * vec_len
-        self.rounds += 1
+            per_round = (n + 1) * vec_len
+        self.bytes_transferred += per_round * repeat
+        self.rounds += repeat
 
 
 class SpmdBackend:
     """The production path: one STEP thread per mesh position via shard_map.
 
-    ``spawn`` records the program; ``join`` traces ``thread_proc`` once (the
-    Python iteration loop unrolls into the jitted step), runs it over the
-    mesh, and writes final shared values back into the session's store so the
-    driver-side ``ref.get()`` sees the result exactly as it does on the host
-    backend.
+    ``spawn`` records the program; ``join`` traces ``thread_proc`` once, runs
+    it over the mesh, and writes final shared values back into the session's
+    store so the driver-side ``ref.get()`` sees the result exactly as it does
+    on the host backend.  Iteration written with ``ctx.iterate`` lowers to one
+    ``lax.scan`` (O(1) program size in the trip count); a raw Python loop in
+    ``thread_proc`` still works but unrolls into the jitted step.
     """
 
     kind = "spmd"
@@ -358,14 +476,24 @@ class SpmdBackend:
             raise RuntimeError("SPMD backend already has a spawned program; join() it first")
         self._pending = (thread_proc, tuple(data), tuple(broadcast))
 
-    def join(self, session: "Session", timeout: Optional[float] = None) -> List[Any]:
-        if self._pending is None:
-            return []
-        thread_proc, data, broadcast = self._pending
-        self._pending = None
+    def _compile(self, session: "Session", thread_proc: Callable,
+                 data: Sequence, broadcast: Sequence):
+        """Build the jitted shard_map program for one spawn.
+
+        Returns ``(f, data, names)`` — the compiled callable, the (possibly
+        trimmed) data arrays, and the shared names captured in the trace.
+        """
         n = self.n_threads
         # shard_map splits evenly: trim ragged rows (the host backend gives the
         # remainder to low tids instead; parity holds whenever n divides rows).
+        dropped = [int(a.shape[0] % n) for a in data]
+        if any(dropped):
+            _warn_at_caller(
+                f"SpmdBackend: dropping {sum(dropped)} ragged row(s) "
+                f"({dropped} per data array) so shard_map splits "
+                f"evenly across {n} threads; pad or trim row counts to a "
+                "multiple of n_threads for host/SPMD parity",
+                UserWarning)
         data = tuple(a[: (a.shape[0] // n) * n] for a in data)
         names = session.store.names()
         shared0 = {m: session.store.get(m) for m in names}
@@ -384,6 +512,28 @@ class SpmdBackend:
         in_specs = tuple(P(self.axis) for _ in data) + tuple(P() for _ in broadcast)
         f = jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
                               out_specs=P(self.axis), check_vma=False))
+        return f, data, names
+
+    def lower(self, session: "Session", thread_proc: Callable,
+              data: Sequence, broadcast: Sequence):
+        """Trace + lower ``thread_proc`` without running it: the hook for
+        compile-cost inspection (``lowered.as_text()`` / ``.compile()``)."""
+        f, data, _ = self._compile(session, thread_proc, data, broadcast)
+        # accounting fires at trace time: inspection must not charge the
+        # session's wire-traffic figures, so trace against throwaway stats
+        stats, self.stats = self.stats, SpmdTraffic()
+        try:
+            return f.lower(*data, *broadcast)
+        finally:
+            self.stats = stats
+
+    def join(self, session: "Session", timeout: Optional[float] = None) -> List[Any]:
+        if self._pending is None:
+            return []
+        thread_proc, data, broadcast = self._pending
+        self._pending = None
+        n = self.n_threads
+        f, data, names = self._compile(session, thread_proc, data, broadcast)
         stacked_result, stacked_shared = f(*data, *broadcast)
         for m in names:
             session.store.set(m, jax.tree.map(lambda x: x[0], stacked_shared[m]))
@@ -490,6 +640,21 @@ class Session:
         """``spawn`` + ``join``."""
         self.spawn(thread_proc, data=data, broadcast=broadcast)
         return self.join(timeout)
+
+    def lower(self, thread_proc: Callable, *, data: Sequence = (),
+              broadcast: Sequence = ()):
+        """Trace + lower ``thread_proc`` without executing it (SPMD backend).
+
+        Returns the ``jax.stages.Lowered`` for the program ``join`` would run:
+        inspect ``.as_text()`` for lowered size (the ``ctx.iterate`` scan path
+        is O(1) in ``iters``) or ``.compile()`` for compile cost.
+        """
+        if self.backend.kind != "spmd":
+            raise RuntimeError("Session.lower inspects the traced SPMD program; "
+                               "the host backend does not trace thread_proc")
+        data = tuple(jnp.asarray(a) for a in data)
+        broadcast = tuple(jnp.asarray(b) for b in broadcast)
+        return self.backend.lower(self, thread_proc, data, broadcast)
 
     def kill_node(self, node_id: int) -> List[int]:
         """Simulate a node failure (host backend); returns lost tids."""

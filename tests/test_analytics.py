@@ -63,6 +63,36 @@ def test_pagerank_threads_match_reference():
     assert abs(float(np.sum(rr)) - 1.0) < 0.05  # ranks ≈ distribution
 
 
+def test_deprecated_shims_warn_and_stay_correct():
+    """fit_threads / fit_spmd are shims: they must warn DeprecationWarning AND
+    still return the same results as the fit() they forward to."""
+    from repro.core.compat import make_mesh
+    mesh1 = make_mesh((1,), ("data",))
+
+    x, y, _ = logreg_dataset(200, 16, seed=5)
+    ref_lr = logreg.fit_reference(x, y, iters=6, lr=1e-3)
+    with pytest.warns(DeprecationWarning, match="logreg.fit_threads"):
+        th, store, accu = logreg.fit_threads(x, y, n_nodes=2, threads_per_node=2,
+                                             iters=6, lr=1e-3)
+    np.testing.assert_allclose(th, ref_lr, rtol=1e-4, atol=1e-5)
+    assert accu.rounds == 6
+    with pytest.warns(DeprecationWarning, match="logreg.fit_spmd"):
+        th_s = logreg.fit_spmd(x, y, mesh1, iters=6, lr=1e-3)
+    np.testing.assert_allclose(th_s, ref_lr, rtol=1e-4, atol=1e-5)
+
+    xk, _, _ = kmeans_dataset(300, 8, 4, seed=6)
+    ref_km = kmeans.fit_reference(xk, 4, iters=5, seed=6)
+    with pytest.warns(DeprecationWarning, match="kmeans.fit_threads"):
+        ck, _, _ = kmeans.fit_threads(xk, 4, n_nodes=2, threads_per_node=2,
+                                      iters=5, seed=6)
+    np.testing.assert_allclose(np.sort(ck, axis=0), np.sort(ref_km, axis=0),
+                               rtol=1e-3, atol=1e-3)
+    with pytest.warns(DeprecationWarning, match="kmeans.fit_spmd"):
+        cs = kmeans.fit_spmd(xk, 4, mesh1, iters=5, seed=6)
+    np.testing.assert_allclose(np.sort(cs, axis=0), np.sort(ref_km, axis=0),
+                               rtol=1e-3, atol=1e-3)
+
+
 def test_logreg_ssp_async_converges():
     """Bounded-staleness async training reaches the same loss ballpark as sync."""
     x, y, _ = logreg_dataset(400, 16, seed=4)

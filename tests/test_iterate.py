@@ -1,0 +1,183 @@
+"""ctx.iterate / ctx.fori: one logical loop, two lowerings.
+
+Host backend: plain Python loop with a ``ctx.guard()`` checkpoint per round.
+SPMD backend: one ``lax.scan`` with the shared-value dict threaded through the
+carry — lowered program size and compile time O(1) in ``iters``, traffic
+accounting multiplied by the trip count.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess_devices
+from repro.core import AccumMode, Session
+from repro.core.session import SpmdTraffic
+
+
+# -- semantics (host backend) -------------------------------------------------
+
+
+def test_iterate_host_matches_manual_loop():
+    sess = Session(backend="host", n_nodes=1, threads_per_node=2)
+    out = sess.new_array("out", (4,))
+
+    def proc(ctx):
+        def step(theta):
+            total = out.accumulate(jnp.ones(4))
+            return theta + 0.5 * total
+        return ctx.iterate(step, jnp.zeros(4), 3)
+
+    results = sess.run(proc)
+    # 2 threads x ones(4) -> total 2.0 per round; 3 rounds x 0.5 * 2.0 = 3.0
+    for r in results:
+        np.testing.assert_allclose(np.asarray(r), 3.0)
+
+
+def test_fori_passes_running_index():
+    sess = Session(backend="host", n_nodes=1, threads_per_node=2)
+
+    def proc(ctx):
+        return ctx.fori(lambda i, c: c + i, 0, 5)
+
+    assert sess.run(proc) == [0 + 1 + 2 + 3 + 4] * 2
+
+
+def test_iterate_zero_rounds_returns_carry():
+    for backend in ("host", "spmd"):
+        sess = Session(backend=backend, n_nodes=1, threads_per_node=1)
+
+        def proc(ctx):
+            return ctx.iterate(lambda c: c + 1.0, jnp.float32(7.0), 0)
+
+        assert [float(r) for r in sess.run(proc)] == [7.0]
+
+
+# -- backend parity on the scan path ------------------------------------------
+
+
+def _ran_program(backend):
+    """Shared get/set + accumulate + local carry, all inside ctx.iterate."""
+    sess = Session(backend=backend, n_nodes=1, threads_per_node=1)
+    w = sess.def_global("w", jnp.arange(4.0))
+    acc = sess.new_array("acc", (4,))
+
+    def proc(ctx, xs):
+        def step(theta):
+            total = acc.accumulate(xs.sum(0) * w.get())
+            w.set(w.get() * 0.5)
+            return theta + total
+        return ctx.iterate(step, jnp.zeros(4), 4)
+
+    res = sess.run(proc, data=(jnp.ones((2, 4)),))
+    return np.asarray(res[0]), np.asarray(w.get())
+
+
+def test_iterate_parity_host_vs_spmd_single_device():
+    th, wh = _ran_program("host")
+    ts, ws = _ran_program("spmd")
+    np.testing.assert_allclose(ts, th, rtol=1e-6)
+    np.testing.assert_allclose(ws, wh, rtol=1e-6)
+
+
+def test_iterate_multidevice_scan_parity_and_ragged_warning():
+    """4-device scan path == host results; ragged rows warn before trimming."""
+    out = run_subprocess_devices("""
+import warnings
+import jax.numpy as jnp, numpy as np
+from repro.core import Session
+
+def program(backend, rows):
+    sess = Session(backend=backend, n_nodes=2, threads_per_node=2)
+    w = sess.def_global("w", jnp.ones(8))
+    acc = sess.new_array("acc", (8,))
+    def proc(ctx, xs):
+        def step(theta):
+            total = acc.accumulate(xs.sum(0) + w.get())
+            w.set(total / ctx.n_threads)
+            return theta + total
+        return ctx.iterate(step, jnp.zeros(8), 5)
+    res = sess.run(proc, data=(jnp.ones((rows, 8)),))
+    return np.asarray(res[0]), np.asarray(w.get()), sess
+
+th, wh, _ = program("host", 16)
+ts, ws, ss = program("spmd", 16)
+assert ss.backend.n_threads == 4
+np.testing.assert_allclose(ts, th, rtol=1e-5)
+np.testing.assert_allclose(ws, wh, rtol=1e-5)
+assert ss.backend.stats.rounds == 5
+
+with warnings.catch_warnings(record=True) as rec:
+    warnings.simplefilter("always")
+    program("spmd", 18)    # 18 % 4 == 2 ragged rows
+msgs = [str(r.message) for r in rec if r.category is UserWarning]
+assert any("2 ragged row" in m for m in msgs), msgs
+print("ITERATE_MULTIDEVICE_OK")
+""", n_devices=4)
+    assert "ITERATE_MULTIDEVICE_OK" in out
+
+
+# -- compile cost: O(1) in iters (the acceptance criterion) -------------------
+
+
+def _lowered_lines(iters: int) -> int:
+    sess = Session(backend="spmd")
+    grad = sess.new_array("grad", (8,))
+
+    def proc(ctx, xs):
+        def step(theta):
+            return theta + grad.accumulate(xs.sum(0))
+        return ctx.iterate(step, jnp.zeros(8), iters)
+
+    return len(sess.lower(proc, data=(jnp.ones((4, 8)),)).as_text().splitlines())
+
+
+def test_spmd_iterate_program_size_constant_in_iters():
+    sizes = {iters: _lowered_lines(iters) for iters in (2, 32, 256)}
+    assert len(set(sizes.values())) == 1, f"lowered size varies with iters: {sizes}"
+
+
+def test_session_lower_rejects_host_backend():
+    sess = Session(backend="host")
+    with pytest.raises(RuntimeError, match="SPMD"):
+        sess.lower(lambda ctx: None)
+
+
+# -- traffic accounting under the scan ----------------------------------------
+
+
+def test_spmd_traffic_multiplied_by_trip_count():
+    sess = Session(backend="spmd")
+    n = sess.backend.n_threads
+    out = sess.new_array("out", (16,))
+
+    def proc(ctx):
+        return ctx.iterate(lambda c: c + out.accumulate(jnp.ones(16))[0], 0.0, 7)
+
+    sess.run(proc)
+    assert sess.backend.stats.rounds == 7
+    assert sess.wire_traffic() == (n + 1) * 16 * 7
+
+
+def test_spmd_traffic_scalar_accumulate_does_not_crash():
+    # regression: account() used local.shape[0], which raised on 0-d values
+    stats = SpmdTraffic()
+    stats.account(AccumMode.REDUCE_SCATTER, 4, 1, None)
+    assert stats.bytes_transferred == 5 and stats.rounds == 1
+
+
+def test_scalar_accumulate_both_backends():
+    for backend, n in (("host", 4), ("spmd", None)):
+        sess = (Session(backend="host", n_nodes=2, threads_per_node=2)
+                if backend == "host" else Session(backend="spmd"))
+        n = n or sess.backend.n_threads
+        c = sess.new_array("c", ())
+
+        def proc(ctx):
+            return ctx.iterate(lambda t: t + c.accumulate(jnp.float32(2.0)),
+                               jnp.float32(0.0), 3)
+
+        res = sess.run(proc)
+        assert [float(r) for r in res] == [2.0 * n * 3] * len(res)
+        assert float(c.get()) == 2.0 * n
+        assert sess.wire_traffic() == (n + 1) * 1 * 3
