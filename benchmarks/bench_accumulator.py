@@ -1,12 +1,21 @@
-"""Paper §5.2 / Table: accumulator traffic — (2N+1)·V vs (N+1)·V.
+"""Paper §5.2 / Table: accumulator traffic — (2N+1)·V vs (N+1)·V, plus the
+sparse wire format.
 
-Validates the paper's claim two ways:
-1. host accumulator: exact wire-traffic accounting per mode;
+Validates the paper's claim three ways:
+1. host accumulator: exact wire-traffic accounting per mode (sparse figures
+   derived from the actual pair-array lengths);
 2. SPMD lowering on an 8-device mesh: per-device collective bytes parsed from
    the compiled HLO — gather_all ≈ N·V vs reduce_scatter ≈ 2·V per device —
-   plus wall time per accumulate call.
+   plus wall time per accumulate call;
+3. dense-vs-sparse-vs-auto sweep over nnz density: which wire format the auto
+   rule picks, what it costs, and Pallas-vs-jnp sparsifier wall time.
+
+The whole table is written to ``benchmarks/BENCH_accumulator.json`` so the
+perf trajectory has data across PRs (``python -m benchmarks.run --only
+accumulator``).
 """
 
+import json
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -15,6 +24,9 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,17 +34,21 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import emit, timeit
 from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate, shard_map
+from repro.core.sparse import blocked_topk_sparsify, pair_capacity
 from repro.launch.mesh import make_host_mesh
 from repro.utils.hlo import collective_bytes_from_hlo
 
+RESULTS = {}
+
 
 def host_layer():
-    V, N, iters = 4096, 8, 5
-    for mode in (AccumMode.GATHER_ALL, AccumMode.REDUCE_SCATTER, AccumMode.SPARSE, AccumMode.AUTO):
+    V, N, iters, k = 4096, 8, 5, 256
+    P_cap = pair_capacity(V, k)
+    for mode in (AccumMode.GATHER_ALL, AccumMode.REDUCE_SCATTER,
+                 AccumMode.SPARSE, AccumMode.AUTO):
         store = GlobalStore()
         store.new_array("out", (V,))
-        acc = DAddAccumulator(store, "out", N, 4, mode)
-        import threading
+        acc = DAddAccumulator(store, "out", N, 4, mode, k=k)
         vec = jnp.ones((V,))
 
         def worker():
@@ -40,14 +56,21 @@ def host_layer():
                 acc.accumulate(vec)
 
         ts = [threading.Thread(target=worker) for _ in range(N)]
-        t0 = __import__("time").perf_counter()
+        t0 = time.perf_counter()
         [t.start() for t in ts]
         [t.join() for t in ts]
-        us = (__import__("time").perf_counter() - t0) * 1e6 / iters
-        model = {"gather_all": (2 * N + 1) * V, "reduce_scatter": (N + 1) * V,
-                 "sparse": 2 * V + V, "auto": (N + 1) * V}[mode.value]
+        us = (time.perf_counter() - t0) * 1e6 / iters
+        model = {"gather_all": (2 * N + 1) * V,
+                 "reduce_scatter": (N + 1) * V,
+                 "sparse": N * 2 * P_cap + V,   # pairs actually shipped (lossy here)
+                 "auto": (N + 1) * V}[mode.value]  # dense input → dense branch
+        assert acc.bytes_transferred == model * iters, (
+            mode, acc.bytes_transferred, model * iters)
         emit(f"accum_host_{mode.value}", us,
              f"wire_elems={acc.bytes_transferred};model_per_round={model}")
+        RESULTS[f"host_{mode.value}"] = {
+            "us_per_round": us, "wire_elems": acc.bytes_transferred,
+            "model_per_round": model}
 
 
 def spmd_layer():
@@ -78,11 +101,64 @@ def spmd_layer():
              f"coll_bytes_per_dev={coll.total_bytes:.0f};"
              f"wire_bytes_per_dev={coll.total_wire_bytes:.0f};"
              f"ops={coll.total_count};exact={exact}")
+        RESULTS[f"spmd_{mode}"] = {
+            "us_per_call": us, "coll_bytes_per_dev": coll.total_bytes,
+            "wire_bytes_per_dev": coll.total_wire_bytes, "exact": exact}
+
+
+def sparsity_sweep():
+    """Dense vs sparse vs auto over nnz density: wire cost + branch taken,
+    and Pallas-vs-jnp sparsifier wall time at each density."""
+    V, N, k = 1 << 14, 4, 512
+    P_cap = pair_capacity(V, k)
+    rng = np.random.default_rng(0)
+    sweep = {}
+    for density in (0.001, 0.01, 0.03, 0.25, 1.0):
+        vecs = []
+        for _ in range(N):
+            v = np.zeros(V, np.float32)
+            nnz = max(1, int(V * density))
+            pos = rng.choice(V, size=nnz, replace=False)
+            v[pos] = rng.normal(size=nnz)
+            vecs.append(jnp.asarray(v))
+
+        row = {"nnz": int(np.sum(np.asarray(vecs[0]) != 0)),
+               "pair_capacity": P_cap}
+        for mode in (AccumMode.REDUCE_SCATTER, AccumMode.SPARSE, AccumMode.AUTO):
+            store = GlobalStore()
+            store.new_array("out", (V,))
+            acc = DAddAccumulator(store, "out", N, 4, mode, k=k)
+            ts = [threading.Thread(target=acc.accumulate, args=(v,)) for v in vecs]
+            t0 = time.perf_counter()
+            [t.start() for t in ts]
+            [t.join() for t in ts]
+            us = (time.perf_counter() - t0) * 1e6
+            row[mode.value] = {"us": us, "wire_elems": acc.bytes_transferred,
+                               "branch": acc.last_mode.value}
+            emit(f"accum_density{density}_{mode.value}", us,
+                 f"wire_elems={acc.bytes_transferred};branch={acc.last_mode.value}")
+
+        x = vecs[0]
+        us_pl = timeit(lambda: jax.block_until_ready(
+            tuple(blocked_topk_sparsify(x, k))), warmup=1, iters=5)
+        us_jnp = timeit(lambda: jax.block_until_ready(
+            tuple(blocked_topk_sparsify(x, k, impl="jnp"))), warmup=1, iters=5)
+        row["sparsify_pallas_us"] = us_pl
+        row["sparsify_jnp_us"] = us_jnp
+        emit(f"sparsify_density{density}", us_pl, f"jnp_us={us_jnp:.1f}")
+        sweep[str(density)] = row
+    RESULTS["density_sweep"] = sweep
 
 
 def main():
     host_layer()
     spmd_layer()
+    sparsity_sweep()
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "BENCH_accumulator.json")
+    with open(out, "w") as f:
+        json.dump(RESULTS, f, indent=2)
+    print(f"# wrote {out}", flush=True)
 
 
 if __name__ == "__main__":

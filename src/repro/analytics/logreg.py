@@ -54,18 +54,21 @@ def fit(x, y, *, iters: int = 10, lr: float = 1e-3,
         n_nodes: int = 2, threads_per_node: int = 2, mesh=None):
     """Paper §4.5 through the Table-1 facade; backend-agnostic.
 
-    Returns ``(theta, session)`` — the session exposes the store, cache and
-    accumulator traffic for inspection.
+    ``mode="sparse"``/``"auto"`` compress the gradient to top-``k`` (index,
+    value) pairs through the shared Pallas dispatch — ``k`` becomes the grad
+    ref's declared budget (``new_array(..., sparse_k=k)``), so per-round calls
+    need no explicit ``k``.  Returns ``(theta, session)`` — the session
+    exposes the store, cache and accumulator traffic for inspection.
     """
     sess = session or Session(backend=backend, n_nodes=n_nodes,
                               threads_per_node=threads_per_node, mesh=mesh)
     d = x.shape[1]
-    grad = sess.new_array("grad", (d,))
+    grad = sess.new_array("grad", (d,), sparse_k=k)
 
     def thread_proc(ctx, xs, ys):
         def step(theta):                              # one synchronous round
             local = _local_grad(theta, xs, ys)        # lines 14–21
-            total = grad.accumulate(local, mode=mode, k=k)  # line 22 (sync point)
+            total = grad.accumulate(local, mode=mode)  # line 22 (sync point)
             return theta + lr * total                 # lines 23–24
         # local theta (paper line 10) is the carry; host: guarded loop,
         # SPMD: one lax.scan — O(1) lowered program size in `iters`.

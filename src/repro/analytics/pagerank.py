@@ -46,27 +46,25 @@ def fit(edges, n_vertices: int, *, iters: int = 10,
         n_nodes: int = 2, threads_per_node: int = 2, mesh=None):
     """Credit accumulation through the Table-1 facade; backend-agnostic.
 
-    ``mode="auto"`` on the SPMD backend needs a top-k budget ``k`` (the host
-    accumulator measures nnz itself); without one it falls back to
-    ``reduce_scatter`` — numerically identical, since auto is lossless.
+    ``mode="auto"`` ships (index, value) pairs only on rounds where every
+    thread's credit vector compresses losslessly under the budget ``k``
+    (default ~V/4) — identical results either way, cheaper wire format when
+    out-degrees concentrate.  ``k`` becomes the credits ref's declared budget.
     Returns ``(ranks, session)``.
     """
     sess = session or Session(backend=backend, n_nodes=n_nodes,
                               threads_per_node=threads_per_node, mesh=mesh)
-    if (mode is not None and AccumMode(mode) == AccumMode.AUTO
-            and k is None and sess.backend.kind == "spmd"):
-        mode = AccumMode.REDUCE_SCATTER
     src_all, dst_all = jnp.asarray(edges[:, 0]), jnp.asarray(edges[:, 1])
     out_deg = jnp.maximum(jnp.zeros(n_vertices).at[src_all].add(1.0), 1.0)
     ranks = sess.def_global("ranks", jnp.full((n_vertices,), 1.0 / n_vertices))
-    credits = sess.new_array("credits", (n_vertices,))
+    credits = sess.new_array("credits", (n_vertices,), sparse_k=k)
 
     def thread_proc(ctx, edges_loc, deg):
         src, dst = edges_loc[:, 0], edges_loc[:, 1]
 
         def step(_):                       # the shared ranks carry the state
             total = credits.accumulate(
-                _credits(src, dst, ranks.get(), deg, n_vertices), mode=mode, k=k)
+                _credits(src, dst, ranks.get(), deg, n_vertices), mode=mode)
             ranks.set((1 - DAMPING) / n_vertices + DAMPING * total)
             return _
         ctx.iterate(step, None, iters)

@@ -22,21 +22,35 @@ Two layers:
   (``Accumulate(local, len)`` blocking until all N threads contribute), used by
   the Pthreads-style thread pool.  It *accounts traffic per mode* so the
   ``(2N+1)·V → (N+1)·V`` claim is assertable in tests.
+
+Sparse parity contract (both layers): a contribution is compressed with the
+*same* :func:`~repro.core.sparse.blocked_topk_sparsify` dispatch (Pallas
+``topk_compress`` kernel, interpret mode off-TPU), the reduction sums the
+scattered pairs, and wire traffic is ``2 · pair_capacity(V, k)`` elements per
+contribution plus the ``V``-element republish — derived from the actual pair
+arrays, never from a dense sum with sparse accounting.  Compression is lossy
+iff some block's nnz exceeds its per-block quota; ``auto`` only selects pairs
+when they are lossless AND cheaper, so it never changes results.
 """
 
 from __future__ import annotations
 
 import threading
 from enum import Enum
-from functools import partial
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.addressing import align_up
 from repro.core.compat import axis_size as compat_axis_size
-from repro.core.sparse import blocked_topk_sparsify, densify, sparse_beneficial
+from repro.core.sparse import (
+    DEFAULT_BLOCK,
+    blocked_topk_sparsify,
+    default_auto_k,
+    densify,
+    sparse_beneficial,
+)
 
 
 class AccumMode(str, Enum):
@@ -116,14 +130,14 @@ def accumulate(
     if mode == AccumMode.SPARSE:
         if k is None:
             raise ValueError("sparse mode needs a top-k budget k")
-        idx, vals = blocked_topk_sparsify(x, k)
-        all_idx = jax.lax.all_gather(idx, axis, axis=0)      # (N, k) ints
-        all_val = jax.lax.all_gather(vals, axis, axis=0)     # (N, k)
+        pairs = blocked_topk_sparsify(x, k)     # Pallas kernel (interpret off-TPU)
+        all_idx = jax.lax.all_gather(pairs.idx, axis, axis=0)   # (N, P) ints
+        all_val = jax.lax.all_gather(pairs.vals, axis, axis=0)  # (N, P)
         return densify(all_idx, all_val, n)
 
     if mode == AccumMode.AUTO:
         if k is None:
-            raise ValueError("auto mode needs a top-k budget k")
+            k = default_auto_k(n)
         # the paper's rule must agree across devices: decide on the *global*
         # benefit (all_gather of one scalar nnz flag).
         my_ok = sparse_beneficial(x, k)
@@ -159,53 +173,151 @@ class DAddAccumulator:
     then the sum is written into the output shared array in the
     :class:`~repro.core.dsm.GlobalStore`.  Traffic is accounted per the paper's
     cost model so unit tests can assert (N+1)·V vs (2N+1)·V.
+
+    ``mode=SPARSE`` needs a top-k budget ``k``: each thread's contribution is
+    compressed to :class:`~repro.core.sparse.SparsePairs` (the same Pallas
+    ``topk_compress`` dispatch the SPMD collective uses), the round sums the
+    scattered pairs, and traffic is ``Σ_threads 2·pairs + V`` from the actual
+    pair-array lengths.  ``mode=AUTO`` buffers the round, applies the paper's
+    benefit rule to every contribution (lossless AND cheaper), and takes the
+    pairs path only when all threads agree — mirroring the SPMD collective's
+    globally-agreed branch.  All contributions in a round must have the same
+    shape; a ragged contribution raises ``ValueError``, aborts the barrier
+    (parked peers get ``BrokenBarrierError``) and poisons the accumulator —
+    subsequent rounds raise ``RuntimeError`` instead of publishing.
     """
 
     def __init__(self, store, output_name: str, n_threads: int, n_nodes: int,
-                 mode: AccumMode | str = AccumMode.REDUCE_SCATTER):
+                 mode: AccumMode | str = AccumMode.REDUCE_SCATTER, *,
+                 k: Optional[int] = None, block: int = DEFAULT_BLOCK):
         self.store = store
         self.output_name = output_name
         self.n = n_threads
         self.m = max(1, n_nodes)
         self.mode = AccumMode(mode)
+        if self.mode == AccumMode.SPARSE and k is None:
+            raise ValueError("sparse mode needs a top-k budget k")
+        self.k = k                  # AUTO with k=None defaults per round (~V/4)
+        self.block = block
         self._lock = threading.Lock()
-        self._partial = None
+        self._vecs: list = []           # buffered contributions (SPARSE/AUTO)
+        self._partial = None            # running sum (fixed dense modes)
         self._count = 0
+        self._round_len: Optional[int] = None
+        self._round_shape: Optional[tuple] = None
         self._barrier = threading.Barrier(n_threads)
+        self._broken = False        # poisoned by an aborted round
         self.bytes_transferred = 0  # wire-traffic in vector *elements*
         self.rounds = 0
+        self.last_mode: Optional[AccumMode] = None  # branch taken last round
+        self.last_pair_counts: list = []  # per-thread pairs shipped last round
 
-    def _account(self, vec_len: int, nnz_by_thread: Sequence[int]):
+    # modes that can never take the pairs branch keep a running sum — O(V)
+    # peak memory per round; SPARSE/AUTO must buffer the N contributions
+    # (compression/benefit is per contribution, decided when the round closes)
+    _DENSE_MODES = (AccumMode.GATHER_ALL, AccumMode.REDUCE_SCATTER,
+                    AccumMode.HIERARCHICAL)
+
+    def _account_dense(self, vec_len: int) -> None:
         if self.mode == AccumMode.GATHER_ALL:
             # every thread ships V to the root; root ships V back to each: (2N+1)V
             self.bytes_transferred += (2 * self.n + 1) * vec_len
-        elif self.mode in (AccumMode.REDUCE_SCATTER, AccumMode.HIERARCHICAL):
-            # each thread ships its V once (chunked to owners); owners write V total
+        else:
+            # each thread ships its V once (chunked to owners); owners write V
             self.bytes_transferred += (self.n + 1) * vec_len
-        elif self.mode == AccumMode.SPARSE:
-            self.bytes_transferred += sum(2 * z for z in nnz_by_thread) + vec_len
-        else:  # AUTO: cheaper of dense / sparse (paper's rule)
-            dense = (self.n + 1) * vec_len
-            sparse = sum(2 * z for z in nnz_by_thread) + vec_len
-            self.bytes_transferred += min(dense, sparse)
+
+    def _abort_round(self) -> None:
+        self._broken = True
+        self._barrier.abort()
+
+    def _reset_round(self) -> None:
+        self._vecs = []
+        self._partial = None
+        self._count = 0
+        self._round_len = None
+        self._round_shape = None
+
+    def _reduce_round(self) -> None:
+        """Runs under the lock when the round's last contribution arrives."""
+        vec_len, shape = self._round_len, self._round_shape
+        if self.mode in self._DENSE_MODES:
+            total = self._partial
+            self.last_pair_counts = []
+            self._account_dense(vec_len)
+            mode = self.mode
+        else:
+            k = self.k if self.k is not None else default_auto_k(vec_len)
+            # compression works on flat vectors (scalars and matrices ride
+            # along flattened, mirroring the SPMD ctx's rank normalisation)
+            flats = [v.reshape(-1) for v in self._vecs]
+            mode = self.mode
+            if mode == AccumMode.AUTO:
+                # pairs only when every contribution is losslessly
+                # compressible AND cheaper — the same globally-agreed branch
+                # as the collective.
+                all_ok = all(bool(sparse_beneficial(f, k, self.block))
+                             for f in flats)
+                mode = AccumMode.SPARSE if all_ok else AccumMode.REDUCE_SCATTER
+            if mode == AccumMode.SPARSE:
+                pairs = [blocked_topk_sparsify(f, k, self.block) for f in flats]
+                # one scatter-add over the concatenated pair arrays — the same
+                # "densify everything at once" the SPMD all-gather path does
+                total = densify(jnp.concatenate([p.idx for p in pairs]),
+                                jnp.concatenate([p.vals for p in pairs]),
+                                vec_len).reshape(shape)
+                self.last_pair_counts = [p.num_pairs for p in pairs]
+                self.bytes_transferred += (
+                    sum(p.wire_elements for p in pairs) + vec_len)
+            else:
+                total = flats[0]
+                for f in flats[1:]:
+                    total = total + f
+                total = total.reshape(shape)
+                self.last_pair_counts = []
+                self._account_dense(vec_len)
+        self.last_mode = mode
+        self.store.set(self.output_name, total)
+        self.rounds += 1
+        self._reset_round()
 
     def accumulate(self, local_vec) -> None:
         """Paper's ``Accumulate`` — synchronization point across all N threads."""
         local_vec = jnp.asarray(local_vec)
         with self._lock:
-            if self._partial is None:
-                self._partial = local_vec
-                self._nnzs = [int(jnp.sum(local_vec != 0))]
+            if self._broken:
+                # the barrier was aborted by an earlier error; without this
+                # guard a later round would publish its sum to the store and
+                # THEN raise BrokenBarrierError in every thread
+                raise RuntimeError(
+                    "DAddAccumulator is unusable after an aborted round — "
+                    "create a fresh accumulator")
+            if self._count == 0:
+                self._round_shape = local_vec.shape
+                self._round_len = int(local_vec.size)
+            elif local_vec.shape != self._round_shape:
+                # release threads already parked on the barrier, drop the
+                # poisoned round, then surface
+                self._abort_round()
+                shape = self._round_shape
+                self._reset_round()
+                raise ValueError(
+                    f"ragged accumulate contribution: round opened with shape "
+                    f"{shape}, got {local_vec.shape} — all threads must "
+                    "contribute identically-shaped vectors")
+            if self.mode in self._DENSE_MODES:
+                self._partial = (local_vec if self._partial is None
+                                 else self._partial + local_vec)
             else:
-                self._partial = self._partial + local_vec
-                self._nnzs.append(int(jnp.sum(local_vec != 0)))
+                self._vecs.append(local_vec)
             self._count += 1
             if self._count == self.n:
-                self.store.set(self.output_name, self._partial)
-                self._account(int(local_vec.size), self._nnzs)
-                self.rounds += 1
-                self._partial = None
-                self._count = 0
+                try:
+                    self._reduce_round()
+                except BaseException:
+                    # never strand the N-1 threads parked on the barrier
+                    self._abort_round()
+                    self._reset_round()
+                    raise
         self._barrier.wait()
 
     # paper-cased alias

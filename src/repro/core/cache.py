@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Set
+from typing import Dict, Optional, Set
 
 from repro.core.addressing import watcher_node
 from repro.core.dsm import GlobalStore
@@ -51,11 +51,13 @@ class _NodeCache:
             return self.blocks[name]
         return None
 
-    def put(self, name: str, epoch: int, value) -> bool:
-        evicted = False
+    def put(self, name: str, epoch: int, value) -> Optional[str]:
+        """Insert a replica; returns the evicted name (LRU) or None.  The
+        caller must drop the evicted name from the watcher directory, or the
+        node stays listed as a holder forever."""
+        evicted = None
         if name not in self.blocks and len(self.blocks) >= self.capacity:
-            self.blocks.popitem(last=False)  # LRU eviction
-            evicted = True
+            evicted, _ = self.blocks.popitem(last=False)  # LRU eviction
         self.blocks[name] = (epoch, value)
         self.blocks.move_to_end(name)
         return evicted
@@ -83,6 +85,27 @@ class DSMCache:
     def _watcher(self, name: str) -> int:
         return watcher_node(self.store.address(name), self.n_nodes)
 
+    def _forget_holder(self, node_id: int, name: str) -> None:
+        """Remove ``node_id`` from ``name``'s watcher directory (the replica
+        is gone).  A name no longer in the store has no derivable watcher, so
+        fall back to scanning every directory."""
+        try:
+            dirs = [self.directory[self._watcher(name)]]
+        except KeyError:
+            dirs = self.directory
+        for d in dirs:
+            holders = d.get(name)
+            if holders is not None:
+                holders.discard(node_id)
+                if not holders:
+                    del d[name]
+
+    def _note_eviction(self, node_id: int, evicted: Optional[str]) -> None:
+        if evicted is None:
+            return
+        self.stats.evictions += 1
+        self._forget_holder(node_id, evicted)
+
     # -- reads ---------------------------------------------------------------
 
     def read(self, node_id: int, name: str):
@@ -95,8 +118,7 @@ class DSMCache:
         self.stats.misses += 1
         self.stats.missing_messages += 1
         value = self.store.get(name)
-        if self.caches[node_id].put(name, current_epoch, value):
-            self.stats.evictions += 1
+        self._note_eviction(node_id, self.caches[node_id].put(name, current_epoch, value))
         w = self._watcher(name)
         self.directory[w].setdefault(name, set()).add(node_id)
         return value
@@ -115,7 +137,7 @@ class DSMCache:
                     self.stats.invalidations += 1
                 holders.discard(holder)
         # the writer keeps (updates) its own replica
-        self.caches[node_id].put(name, epoch, value)
+        self._note_eviction(node_id, self.caches[node_id].put(name, epoch, value))
         holders.add(node_id)
         self.directory[w][name] = holders
 
@@ -125,3 +147,15 @@ class DSMCache:
         val = self.store.inc(name, amount)
         # epoch bump means every cached replica is now stale; lazily invalid.
         return val
+
+    # -- teardown (DelArray / DelObj) ------------------------------------------
+
+    def drop(self, name: str) -> None:
+        """Purge every node's replica of ``name`` and every directory record —
+        the coherence half of a DSM delete.  Without it, a deleted-then-
+        re-declared name leaves phantom holders and (pre-generation-epochs)
+        could serve the deleted era's value."""
+        for c in self.caches:
+            c.invalidate(name)
+        for d in self.directory:
+            d.pop(name, None)

@@ -71,6 +71,10 @@ class GlobalStore:
         self.granularity = granularity
         self._alloc = AddressAllocator(coarse=(granularity == "coarse"))
         self._entries: Dict[str, GlobalEntry] = {}
+        # per-name monotonic generation: a name deleted at epoch e re-declares
+        # at e+1, so no cache replica of the deleted era can ever validate as
+        # fresh against the new entry (delete→redeclare stale-read fix)
+        self._gen: Dict[str, int] = {}
         self._lock = threading.Lock()  # serialises Inc (atomic by contract)
         # stats mirroring the paper's DSM throughput discussion
         self.stats = {"get": 0, "set": 0, "inc": 0,
@@ -87,25 +91,38 @@ class GlobalStore:
         nbytes = int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype).itemsize if shape else jnp.dtype(dtype).itemsize
         return max(1, (nbytes + WORD_BYTES - 1) // WORD_BYTES)
 
+    def _fresh_epoch(self, name: str) -> int:
+        """Starting epoch for a (re-)declared name: strictly above every epoch
+        the name has ever had, so stale replicas can never validate."""
+        prev = self._gen.get(name, 0)
+        if name in self._entries:
+            prev = max(prev, self._entries[name].epoch + 1)
+        return prev
+
     def def_global(self, name: str, value, *, spec: Optional[P] = None) -> str:
         """``DefGlobal(NAME, TYPE)`` — declare a shared variable and set it."""
         value = jnp.asarray(value)
+        epoch = self._fresh_epoch(name)
         slot = self._alloc.alloc_field(GLOBALS_OBJECT_ID, self._num_words(value.shape, value.dtype))
         self._entries[name] = GlobalEntry(name, slot, self._sharding(spec),
-                                          self._place(value, spec), spec=spec)
+                                          self._place(value, spec), epoch=epoch,
+                                          spec=spec)
         return name
 
     def new_array(self, name: str, shape, dtype=jnp.float32, *, spec: Optional[P] = None) -> str:
         """``NewArray<TYPE>(n)`` — allocate a zeroed shared array."""
+        epoch = self._fresh_epoch(name)
         oid = self._alloc.new_object()
         slot = self._alloc.alloc_field(oid, self._num_words(shape, dtype))
         value = jnp.zeros(shape, dtype)
         self._entries[name] = GlobalEntry(name, slot, self._sharding(spec),
-                                          self._place(value, spec), spec=spec)
+                                          self._place(value, spec), epoch=epoch,
+                                          spec=spec)
         return name
 
     def new_object(self, name: str, fields: Dict[str, Any], *, specs: Optional[Dict[str, P]] = None) -> str:
         """``NewObj`` — a shared object: a pytree of fields under one object_id."""
+        epoch = self._fresh_epoch(name)
         oid = self._alloc.new_object()
         specs = specs or {}
         placed = {}
@@ -115,13 +132,15 @@ class GlobalStore:
             words += self._num_words(fval.shape, fval.dtype)
             placed[fname] = self._place(fval, specs.get(fname))
         slot = self._alloc.alloc_field(oid, words)
-        self._entries[name] = GlobalEntry(name, slot, None, placed,
+        self._entries[name] = GlobalEntry(name, slot, None, placed, epoch=epoch,
                                           field_specs=dict(specs))
         return name
 
     def delete(self, name: str) -> None:
-        """``DelArray`` / ``DelObj``."""
-        del self._entries[name]
+        """``DelArray`` / ``DelObj``.  Records the retired epoch so a later
+        re-declaration of the same name starts strictly past it."""
+        e = self._entries.pop(name)
+        self._gen[name] = max(self._gen.get(name, 0), e.epoch + 1)
 
     # -- access (the DSM-internal-layer Get/Set of Table 1) -------------------
 

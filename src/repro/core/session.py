@@ -62,6 +62,7 @@ from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate as spm
 from repro.core.cache import DSMCache
 from repro.core.compat import make_mesh, shard_map
 from repro.core.dsm import GlobalStore
+from repro.core.sparse import pair_capacity
 from repro.core.sync import DBarrier, DSemaphore, SSPClock
 from repro.core.threads import DThreadPool, ThreadState
 from repro.data.pipeline import partition_rows
@@ -99,7 +100,13 @@ class SharedRef:
         self._session._write(self.name, value)
 
     def inc(self, amount=1):
-        """``Inc`` — atomic increment; bypasses the cache layer (§5.1)."""
+        """``Inc`` — atomic increment; bypasses the cache layer (§5.1).
+
+        N threads calling ``inc(a)`` advance the value by ``N·a`` on both
+        backends.  The *return value's* intermediate is backend-specific:
+        the host returns each thread's own post-increment snapshot (atomic
+        RMW order), SPMD returns the replicated round total — treat the
+        return as "some current value", not a unique ticket."""
         return self._session._inc(self.name, amount)
 
     def accumulate(self, local, *, mode: Optional[AccumMode | str] = None,
@@ -109,8 +116,10 @@ class SharedRef:
         return self._session._accumulate(self.name, local, mode, k)
 
     def delete(self) -> None:
-        """``DelArray`` / ``DelObj``."""
-        self._session.store.delete(self.name)
+        """``DelArray`` / ``DelObj`` — also purges cache replicas and
+        directory records so a re-declared name can never serve the
+        deleted-era value."""
+        self._session.delete(self.name)
 
     @property
     def address(self) -> int:
@@ -231,7 +240,7 @@ class HostWorkerCtx(WorkerCtx):
             return self._session.cache.atomic_inc(name, amount)
 
     def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
-        accu = self._backend.accumulator(self._session, name, mode)
+        accu = self._backend.accumulator(self._session, name, mode, k)
         accu.accumulate(local)
         return self.read(name)
 
@@ -287,7 +296,12 @@ class SpmdWorkerCtx(WorkerCtx):
         self.values[name] = jax.tree.map(jnp.asarray, value)
 
     def inc(self, name: str, amount):
-        self.values[name] = jnp.asarray(self.values[name]) + amount
+        # `Inc` is per-thread: N threads calling inc(a) must advance the value
+        # by N·a, exactly as N atomic increments do on the host backend.  The
+        # replicated value is written once per trace, so the per-thread amounts
+        # are psum'd over the mesh axis and applied in one replicated update.
+        total = jax.lax.psum(jnp.asarray(amount), self._backend.axis)
+        self.values[name] = jnp.asarray(self.values[name]) + total
         return self.values[name]
 
     def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
@@ -359,22 +373,38 @@ class HostBackend:
         return self.pool.n_nodes
 
     def accumulator(self, session: "Session", name: str,
-                    mode: Optional[AccumMode] = None) -> DAddAccumulator:
-        """Registry: one accumulator per (output ref, mode), created on first
-        use — so per-call mode switches behave the same as on the SPMD path.
-        ``mode=None`` resolves to the ref's sole existing accumulator (the
-        common case for post-run inspection), else the session default."""
+                    mode: Optional[AccumMode] = None,
+                    k: Optional[int] = None) -> DAddAccumulator:
+        """Registry: one accumulator per (output ref, mode, k budget), created
+        on first use — so per-call mode/budget switches behave the same as on
+        the SPMD path.  ``mode=None`` resolves to the ref's sole existing
+        accumulator (the common case for post-run inspection), else the
+        session default; ``k=None`` resolves to the ref's declared
+        ``sparse_k`` budget."""
         with self._lock:
             if mode is None:
-                existing = [a for (n, _), a in self._accumulators.items() if n == name]
+                existing = [a for (n, _, _), a in self._accumulators.items()
+                            if n == name]
                 if len(existing) == 1:
                     return existing[0]
                 mode = session.accum_mode
-            key = (name, AccumMode(mode))
+            mode = AccumMode(mode)
+            if k is None:
+                k = session.sparse_k(name)
+            key = (name, mode, k)
             accu = self._accumulators.get(key)
+            if accu is None and k is None:
+                # budget-less inspection of a ref that accumulated with a
+                # per-call k: resolve to the sole (name, mode) accumulator
+                # instead of constructing a fresh zero-traffic one (which for
+                # SPARSE would even be unconstructible without a budget)
+                matches = [a for (n, m, _), a in self._accumulators.items()
+                           if n == name and m == mode]
+                if len(matches) == 1:
+                    return matches[0]
             if accu is None:
                 accu = DAddAccumulator(session.store, name, self.n_threads,
-                                       self.n_nodes, key[1])
+                                       self.n_nodes, mode, k=k)
                 self._accumulators[key] = accu
             return accu
 
@@ -428,11 +458,18 @@ class SpmdTraffic:
         count of the local contribution (scalars cost 1, like the host
         accumulator).  ``repeat`` multiplies by the trip count when the call
         site sits inside ``ctx.iterate`` — the scan body is traced once but
-        executes ``iters`` rounds."""
+        executes ``iters`` rounds.
+
+        ``sparse`` is costed from the pair arrays actually shipped: every
+        device all-gathers ``pair_capacity(V, k)`` static (index, value)
+        pairs, and the densified result is the ``V``-element republish — the
+        same ``Σ 2·pairs + V`` figure the host accumulator derives from its
+        per-thread :class:`~repro.core.sparse.SparsePairs`, so
+        ``wire_traffic()`` agrees across backends for a sparse round."""
         if mode == AccumMode.GATHER_ALL:
             per_round = (2 * n + 1) * vec_len
         elif mode == AccumMode.SPARSE:
-            per_round = 2 * (k or 0) * n + vec_len
+            per_round = 2 * pair_capacity(vec_len, k) * n + vec_len
         else:  # REDUCE_SCATTER / HIERARCHICAL / AUTO (dense upper bound)
             per_round = (n + 1) * vec_len
         self.bytes_transferred += per_round * repeat
@@ -586,19 +623,40 @@ class Session:
         self.cache = DSMCache(self.store, n_nodes=backend.n_nodes,
                               capacity=cache_capacity)
         self._cache_lock = threading.Lock()
+        self._sparse_k: Dict[str, int] = {}  # per-ref default top-k budgets
         self._tls = threading.local()
 
     # -- Table 1: DSM manipulation --------------------------------------------
 
-    def def_global(self, name: str, value, *, spec=None) -> SharedRef:
-        """``DefGlobal`` — declare + initialise a shared variable."""
+    def def_global(self, name: str, value, *, spec=None,
+                   sparse_k: Optional[int] = None) -> SharedRef:
+        """``DefGlobal`` — declare + initialise a shared variable.
+
+        ``sparse_k`` sets the ref's default top-k budget: any
+        ``ref.accumulate(..., mode="sparse"|"auto")`` without an explicit
+        ``k`` compresses with this budget on either backend."""
         self.store.def_global(name, value, spec=spec)
+        self._set_sparse_k(name, sparse_k)
         return SharedRef(self, name)
 
-    def new_array(self, name: str, shape, dtype=jnp.float32, *, spec=None) -> SharedRef:
-        """``NewArray`` — allocate a zeroed shared array."""
+    def new_array(self, name: str, shape, dtype=jnp.float32, *, spec=None,
+                  sparse_k: Optional[int] = None) -> SharedRef:
+        """``NewArray`` — allocate a zeroed shared array.  ``sparse_k`` is the
+        ref's default top-k budget for sparse/auto accumulates."""
         self.store.new_array(name, shape, dtype, spec=spec)
+        self._set_sparse_k(name, sparse_k)
         return SharedRef(self, name)
+
+    def _set_sparse_k(self, name: str, sparse_k: Optional[int]) -> None:
+        self._sparse_k.pop(name, None)  # re-declared names drop the old budget
+        if sparse_k is not None:
+            if sparse_k < 1:
+                raise ValueError(f"sparse_k must be >= 1, got {sparse_k}")
+            self._sparse_k[name] = int(sparse_k)
+
+    def sparse_k(self, name: str) -> Optional[int]:
+        """The ref's declared default top-k budget (None if unset)."""
+        return self._sparse_k.get(name)
 
     def new_object(self, name: str, fields: Dict[str, Any], *, specs=None) -> SharedRef:
         """``NewObj`` — a shared pytree of fields under one object_id."""
@@ -615,7 +673,15 @@ class Session:
         return self.store.names()
 
     def delete(self, name: str) -> None:
-        self.store.delete(name)
+        """``DelArray`` / ``DelObj`` + coherence teardown: every node's cache
+        replica and every directory record of the name is purged, so a later
+        re-declaration under the same name starts with no stale state."""
+        with self._cache_lock:   # don't race concurrent worker reads/writes:
+            # store.delete must happen under the same lock, or a read between
+            # drop and delete would re-populate the replica + directory entry
+            self.cache.drop(name)
+            self.store.delete(name)
+            self._sparse_k.pop(name, None)
 
     # -- Table 1: cluster & thread management ---------------------------------
 
@@ -728,6 +794,8 @@ class Session:
             raise RuntimeError(
                 "SharedRef.accumulate is a collective across the session's "
                 "threads — call it inside a thread_proc run by Session.spawn")
+        if k is None:
+            k = self._sparse_k.get(name)  # the ref's declared default budget
         return ctx.accumulate(name, jnp.asarray(local),
                               AccumMode(mode) if mode is not None else self.accum_mode, k)
 

@@ -30,8 +30,9 @@ def _topk_kernel(x_ref, idx_ref, val_ref, *, k: int, block_v: int, total: int):
     def body(i, carry):
         mag_c, = carry
         am = jnp.argmax(mag_c)
-        idx_ref[i] = (base + am).astype(jnp.int32)
-        val_ref[i] = jnp.where(mag_c[am] >= 0, x[am], 0.0).astype(val_ref.dtype)
+        ok = mag_c[am] >= 0                      # padded/exhausted → (0, 0) pair
+        idx_ref[i] = jnp.where(ok, base + am, 0).astype(jnp.int32)
+        val_ref[i] = jnp.where(ok, x[am], 0.0).astype(val_ref.dtype)
         return (mag_c.at[am].set(-2.0),)
 
     jax.lax.fori_loop(0, k, body, (mag,))

@@ -1,4 +1,11 @@
-"""Jit'd wrapper for blocked top-k compression."""
+"""Jit'd wrapper for blocked top-k compression.
+
+This is the entry point :func:`repro.core.sparse.blocked_topk_sparsify`
+dispatches to: compiled Pallas on TPU, interpret mode everywhere else (the
+kernel then runs as regular traced jax ops, so it stays legal inside
+``shard_map`` and ``lax.scan`` — the accumulator's SPMD sparse path relies
+on this).
+"""
 
 from functools import partial
 
@@ -9,6 +16,14 @@ from repro.kernels.topk_compress.kernel import topk_compress_blocked
 
 @partial(jax.jit, static_argnames=("k_per_block", "block_v", "interpret"))
 def topk_compress(x, *, k_per_block: int, block_v: int = 1024, interpret=None):
+    if x.ndim != 1:
+        raise ValueError(f"topk_compress wants a 1-D vector, got shape {x.shape}")
+    if k_per_block < 1:
+        raise ValueError(f"k_per_block must be >= 1, got {k_per_block}")
+    if k_per_block > min(block_v, x.shape[0]):
+        raise ValueError(
+            f"k_per_block={k_per_block} exceeds the block size "
+            f"{min(block_v, x.shape[0])} — nothing left to select")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return topk_compress_blocked(x, k_per_block=k_per_block, block_v=block_v,

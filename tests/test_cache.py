@@ -57,3 +57,68 @@ def test_epoch_staleness():
     store.set("v", jnp.ones(8))      # direct store write bumps epoch
     np.testing.assert_allclose(cache.read(0, "v"), 1.0)  # stale replica refreshed
     assert cache.stats.misses == 2
+
+
+def _holder_count(cache, node_id):
+    return sum(1 for d in cache.directory
+               for holders in d.values() if node_id in holders)
+
+
+def test_eviction_cleans_directory():
+    """LRU eviction must remove the node from the evicted name's watcher
+    directory: directory size stays bounded by cache capacity per node, and
+    invalidation fan-out is not overcounted for long-gone replicas."""
+    store = GlobalStore()
+    names = [f"n{i}" for i in range(6)]
+    for n in names:
+        store.new_array(n, (4,))
+    cache = DSMCache(store, n_nodes=4, capacity=2)
+    for n in names:
+        cache.read(0, n)
+    assert cache.stats.evictions == 4
+    # pre-fix: node 0 stayed listed as holder of all 6 names
+    assert _holder_count(cache, 0) == 2
+    assert sum(len(d) for d in cache.directory) == 2
+
+    # a write to an evicted name must not count an invalidation for node 0
+    before = cache.stats.invalidations
+    cache.write(1, names[0], jnp.ones(4))
+    assert cache.stats.invalidations == before
+
+
+def test_eviction_directory_bounded_under_churn():
+    store = GlobalStore()
+    names = [f"c{i}" for i in range(16)]
+    for n in names:
+        store.new_array(n, (2,))
+    cache = DSMCache(store, n_nodes=2, capacity=3)
+    for rep in range(3):
+        for n in names:
+            cache.read(rep % 2, n)
+    for node in (0, 1):
+        assert _holder_count(cache, node) <= 3
+
+
+def test_delete_redeclare_store_path_is_fresh():
+    """Store-level delete→redeclare: the new entry's epoch is strictly past
+    the deleted era, so an old replica can never validate as fresh."""
+    store = GlobalStore()
+    store.def_global("v", jnp.full((4,), 5.0))
+    cache = DSMCache(store, n_nodes=2, capacity=4)
+    np.testing.assert_allclose(cache.read(0, "v"), 5.0)   # replica @ epoch 0
+    store.delete("v")
+    store.def_global("v", jnp.full((4,), 9.0))            # pre-fix: epoch 0 again
+    np.testing.assert_allclose(cache.read(0, "v"), 9.0)   # not the stale 5.0
+    assert store.epoch("v") > 0
+
+
+def test_drop_purges_replicas_and_directory():
+    store, cache = make()
+    cache.read(0, "v")
+    cache.read(1, "v")
+    cache.drop("v")
+    assert all("v" not in c.blocks for c in cache.caches)
+    assert all("v" not in d for d in cache.directory)
+    # a fresh read misses (no phantom replica) and re-registers cleanly
+    cache.read(0, "v")
+    assert cache.stats.misses == 3

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernel  # interpret-mode kernel tests, in tier-1
+
 DTYPES = [jnp.float32, jnp.bfloat16]
 
 

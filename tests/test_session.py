@@ -164,6 +164,44 @@ def test_store_set_object_keeps_field_specs():
     np.testing.assert_allclose(np.asarray(w), 2.0)
 
 
+def test_accumulator_inspection_resolves_per_call_budget():
+    """Post-run sess.accumulator(name, mode) with no k must resolve the
+    accumulator the run actually used (per-call k), not construct a fresh
+    zero-traffic one (unconstructible for SPARSE without a budget)."""
+    sess = Session(backend="host", n_nodes=2, threads_per_node=2)
+    out = sess.new_array("g", (64,))
+
+    def proc(ctx):
+        out.accumulate(jnp.ones(64), mode="sparse", k=8)
+
+    sess.run(proc)
+    accu = sess.accumulator("g", "sparse")     # no k: resolve, don't build
+    assert accu.k == 8 and accu.bytes_transferred > 0
+    assert sess.accumulator("g") is accu       # sole accumulator for the ref
+
+
+def test_delete_redeclare_facade_no_stale_read():
+    """SharedRef.delete → new_array under the same name: a worker whose node
+    cached the deleted-era value must NOT be served it (pre-fix the re-declared
+    entry restarted at epoch 0 and the stale replica validated as fresh)."""
+    sess = Session(backend="host", n_nodes=1, threads_per_node=1)
+    v = sess.def_global("v", jnp.full((4,), 1.0))
+    warmed = sess.run(lambda ctx: float(np.asarray(v.get())[0]))
+    assert warmed == [1.0]                      # node 0 now holds a replica
+    v.delete()
+    with pytest.raises(KeyError):
+        sess.ref("v")
+    v2 = sess.def_global("v", jnp.full((4,), 7.0))
+    got = sess.run(lambda ctx: float(np.asarray(v2.get())[0]))
+    assert got == [7.0]
+    # and the sparse budget does not leak across the delete
+    a = sess.new_array("g", (8,), sparse_k=4)
+    assert sess.sparse_k("g") == 4
+    a.delete()
+    sess.new_array("g", (8,))
+    assert sess.sparse_k("g") is None
+
+
 def test_ssp_inc_is_atomic_under_contention():
     sess = Session(backend="host", n_nodes=4, threads_per_node=1)
     counter = sess.def_global("counter", 0.0)
