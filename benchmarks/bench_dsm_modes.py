@@ -1,16 +1,22 @@
-"""Paper Fig. 3: fine- vs coarse-grained DSM.
+"""Paper Fig. 3: fine- vs coarse-grained DSM, plus the shard-count sweep.
 
-Two structural measurements on real machinery:
+Three structural measurements on real machinery:
 1. transfer counts through the GlobalStore under each granularity (the paper's
    request-count argument: coarse-grained = 1 bulk transfer per object, fine =
    1 per 32-bit word), plus wall time of get/set round trips;
 2. the TPU realisation — a 200-leaf parameter pytree moved leaf-by-leaf
    ("fine") vs packed into one 128-aligned buffer ("coarse", pack_tree) —
-   which is the latency-vs-bandwidth trade the paper measures on memcached.
+   which is the latency-vs-bandwidth trade the paper measures on memcached;
+3. the ``step.shards`` sweep — S=1 vs S=8 consistent-hash shards under a
+   concurrent multi-thread cached read/write mix (the workload the seed's
+   single cache lock serialised), written to ``benchmarks/BENCH_shards.json``.
 """
 
+import json
 import os
 import sys
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +25,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.common import emit, timeit
-from repro.core import GlobalStore, pack_spec, pack_tree, unpack_tree
+from repro.core import DSMCache, GlobalStore, pack_spec, pack_tree, unpack_tree
 
 
 def main():
@@ -62,6 +68,74 @@ def main():
     back = unpack_tree(buf, spec)
     ok = all(np.allclose(tree[k], back[k]) for k in tree)
     emit("dsm_coarse_roundtrip_exact", 0.0, f"ok={ok}")
+
+    shard_sweep()
+
+
+def _mixed_workload(store, cache, names, n_threads, ops_per_thread, write_every):
+    """Concurrent cached read/write mix: each worker node loops over its
+    name stream, writing a fresh host buffer every `write_every`-th op (the
+    numpy→jax conversion happens under the owning shard's lock — exactly the
+    hold the seed's single lock serialised across all names)."""
+    payload = [np.full((262144,), float(t), np.float32) for t in range(n_threads)]
+    errs = []
+
+    def worker(node):
+        try:
+            for i in range(ops_per_thread):
+                name = names[(node * 31 + i) % len(names)]
+                if i % write_every == node % write_every:
+                    cache.write(node, name, payload[node])
+                else:
+                    cache.read(node, name)
+        except Exception as e:  # pragma: no cover - surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(n_threads)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errs:
+        raise errs[0]
+    return time.perf_counter() - t0
+
+
+def shard_sweep(n_threads: int = 8, n_names: int = 64,
+                ops_per_thread: int = 120, write_every: int = 2):
+    """S=1 vs S=8: the same mixed read/write workload over the same namespace;
+    per-shard locks let ops on different shards overlap."""
+    results = {"workload": {"threads": n_threads, "names": n_names,
+                            "ops_per_thread": ops_per_thread,
+                            "write_every": write_every, "vector_len": 262144}}
+    for shards in (1, 8):
+        store = GlobalStore(shards=shards)
+        cache = DSMCache(store, n_nodes=n_threads, capacity=n_names)
+        names = [f"v{i}" for i in range(n_names)]
+        for n in names:
+            store.new_array(n, (262144,))
+        _mixed_workload(store, cache, names, n_threads, 20, write_every)  # warmup
+        dt = _mixed_workload(store, cache, names, n_threads, ops_per_thread,
+                             write_every)
+        total_ops = n_threads * ops_per_thread
+        results[f"s{shards}"] = {
+            "seconds": dt,
+            "ops_per_sec": total_ops / dt,
+            "cache_hit_rate": cache.stats.hit_rate,
+            "shards_busy": sum(1 for row in store.shard_stats().values()
+                               if row["get"] + row["set"] > 0),
+        }
+        emit(f"dsm_sharded_rw_mix_s{shards}", dt / total_ops * 1e6,
+             f"ops_per_sec={total_ops / dt:.0f}")
+    results["speedup_s8_over_s1"] = (results["s8"]["ops_per_sec"]
+                                     / results["s1"]["ops_per_sec"])
+    emit("dsm_sharded_speedup", 0.0,
+         f"s8_over_s1={results['speedup_s8_over_s1']:.2f}x")
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "BENCH_shards.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ import subprocess
 import sys
 
 BENCHES = [
-    ("dsm_modes", "benchmarks.bench_dsm_modes"),            # Fig. 3
+    ("dsm_modes", "benchmarks.bench_dsm_modes"),            # Fig. 3 + shard sweep
     ("accumulator", "benchmarks.bench_accumulator"),        # §5.2 traffic claim
     ("apps", "benchmarks.bench_apps"),                      # Figs. 4–10
     ("fault_tolerance", "benchmarks.bench_fault_tolerance"),  # Fig. 11

@@ -3,8 +3,11 @@
 Runs distributed K-means sessions, kills a node via the heartbeat monitor,
 and recovers twice — single-node vs multi-node recovery — through
 ``ft.session_recovery``, which replans thread placement over the survivors
-and rolls a fresh Session onto the surviving DSM.  Then demonstrates
-checkpoint/rollback exactness for the shared state.
+and rolls a fresh Session onto the surviving DSM.  With a sharded store
+(``shards=n_nodes``), recovery also removes the dead node's shard from the
+consistent-hash ring: only its ~1/S of keys migrate to survivors, epochs
+intact.  Then demonstrates checkpoint/rollback exactness for the shared
+state.
 
     PYTHONPATH=src python examples/fault_tolerance_drill.py
 """
@@ -39,7 +42,8 @@ def main():
     # -- recovery planning: single vs multi (Fig. 11) --------------------------
     for mode in ("single", "multi"):
         failed_session = Session(backend="host", n_nodes=n_nodes,
-                                 threads_per_node=tpn)
+                                 threads_per_node=tpn, shards=n_nodes)
+        kmeans.fit(x, 8, iters=1, seed=0, session=failed_session)
         plan, recovered = session_recovery(
             failed_session, failures[0] if failures else [2], mode=mode,
             threads_per_node=tpn if mode == "multi" else tpn * 2)
@@ -47,8 +51,11 @@ def main():
         # recovery = reload the dead node's partitions + recompute one iteration
         centers, _ = kmeans.fit(x, 8, iters=1, seed=0, session=recovered)
         dt = (time.time() - t0) * 1e3
+        mig = plan.migration
+        moved = (f"ring: moved {len(mig.moved)}/{mig.total_names} keys off "
+                 f"shard {mig.removed}" if mig else "ring: unchanged")
         print(f"{mode:>6s}-node recovery: reassign {plan.reassignment} "
-              f"redo-iteration {dt:.0f}ms")
+              f"redo-iteration {dt:.0f}ms  {moved}")
 
     # -- checkpoint/rollback exactness ------------------------------------------
     with tempfile.TemporaryDirectory() as d:

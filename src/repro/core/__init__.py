@@ -2,6 +2,7 @@
 
 - :mod:`repro.core.session` - the Table-1 facade: Session / SharedRef / backends
 - :mod:`repro.core.dsm` - GlobalStore distributed shared memory (fine/coarse)
+- :mod:`repro.core.shards` - consistent-hash sharded store beneath the DSM
 - :mod:`repro.core.accumulator` - DAddAccumulator (SPMD + host forms)
 - :mod:`repro.core.cache` - directory-based write-invalidate DSM cache
 - :mod:`repro.core.sync` - DBarrier / DSemaphore / SSP clock
@@ -15,23 +16,25 @@ same workload code runs on the host or SPMD backend.
 """
 
 from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate, accumulate_scatter, accumulate_tree
-from repro.core.addressing import AddressAllocator, make_address, split_address, watcher_node
+from repro.core.addressing import AddressAllocator, make_address, ring_hash, split_address, watcher_node
 from repro.core.cache import DSMCache, CacheStats
 from repro.core.compat import axis_size, cost_analysis, make_mesh, shard_map
 from repro.core.dsm import GlobalStore, PackSpec, pack_spec, pack_tree, unpack_tree
 from repro.core.session import Backend, HostBackend, Session, SharedRef, SpmdBackend, WorkerCtx
-from repro.core.sparse import blocked_topk_sparsify, densify, sparse_beneficial, topk_sparsify
+from repro.core.shards import HashRing, Shard, ShardedStore, ShardMigration
+from repro.core.sparse import blocked_topk_sparsify, densify, sparse_beneficial, sparse_beneficial_batch, topk_sparsify
 from repro.core.sync import DBarrier, DSemaphore, SSPClock
 from repro.core.threads import DThread, DThreadPool, ThreadState, spmd_threads
 
 __all__ = [
     "AccumMode", "DAddAccumulator", "accumulate", "accumulate_scatter", "accumulate_tree",
-    "AddressAllocator", "make_address", "split_address", "watcher_node",
+    "AddressAllocator", "make_address", "ring_hash", "split_address", "watcher_node",
     "DSMCache", "CacheStats",
     "axis_size", "cost_analysis", "make_mesh", "shard_map",
     "GlobalStore", "PackSpec", "pack_spec", "pack_tree", "unpack_tree",
     "Backend", "HostBackend", "Session", "SharedRef", "SpmdBackend", "WorkerCtx",
-    "blocked_topk_sparsify", "densify", "sparse_beneficial", "topk_sparsify",
+    "HashRing", "Shard", "ShardedStore", "ShardMigration",
+    "blocked_topk_sparsify", "densify", "sparse_beneficial", "sparse_beneficial_batch", "topk_sparsify",
     "DBarrier", "DSemaphore", "SSPClock",
     "DThread", "DThreadPool", "ThreadState", "spmd_threads",
 ]

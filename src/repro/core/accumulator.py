@@ -50,6 +50,7 @@ from repro.core.sparse import (
     default_auto_k,
     densify,
     sparse_beneficial,
+    sparse_beneficial_batch,
 )
 
 
@@ -100,13 +101,22 @@ def accumulate(
     inner_axis=None,
     outer_axis=None,
     k: Optional[int] = None,
+    with_branch: bool = False,
 ) -> jax.Array:
     """Sum `x` over mesh axis(es); every device receives the full result.
 
     Must be called inside ``shard_map`` (or under a mesh context with manual
     axes).  `x` is the per-device local vector (leading dim = vector length).
+
+    ``with_branch=True`` (``auto`` mode only) additionally returns the
+    globally-agreed branch decision as a traced bool — the hook the SPMD
+    session uses to carry a device-side "sparse branch taken" counter out of
+    the program, so wire accounting can settle to the branch actually taken.
     """
     mode = AccumMode(mode)
+    if with_branch and mode != AccumMode.AUTO:
+        raise ValueError("with_branch reports the auto rule's runtime "
+                         f"decision; mode {mode.value!r} has no branch")
     n = x.shape[0]
 
     if mode == AccumMode.GATHER_ALL:
@@ -145,7 +155,8 @@ def accumulate(
         use_sparse = jnp.all(all_ok)
         dense_fn = lambda v: accumulate(v, axis, AccumMode.REDUCE_SCATTER)
         sparse_fn = lambda v: accumulate(v, axis, AccumMode.SPARSE, k=k)
-        return jax.lax.cond(use_sparse, sparse_fn, dense_fn, x)
+        total = jax.lax.cond(use_sparse, sparse_fn, dense_fn, x)
+        return (total, use_sparse) if with_branch else total
 
     raise ValueError(f"unknown accumulator mode: {mode}")
 
@@ -254,9 +265,10 @@ class DAddAccumulator:
             if mode == AccumMode.AUTO:
                 # pairs only when every contribution is losslessly
                 # compressible AND cheaper — the same globally-agreed branch
-                # as the collective.
-                all_ok = all(bool(sparse_beneficial(f, k, self.block))
-                             for f in flats)
+                # as the collective.  One jitted call decides the whole round
+                # (the N contributions are same-shape by the ragged check):
+                # a single device sync instead of N small ones per round.
+                all_ok = bool(sparse_beneficial_batch(flats, k, self.block))
                 mode = AccumMode.SPARSE if all_ok else AccumMode.REDUCE_SCATTER
             if mode == AccumMode.SPARSE:
                 pairs = [blocked_topk_sparsify(f, k, self.block) for f in flats]

@@ -14,6 +14,7 @@ aligned blocks (see :mod:`repro.core.dsm`).
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
 
 # --- paper constants (§5.1) -------------------------------------------------
@@ -57,6 +58,23 @@ def block_address(addr: int) -> int:
 def watcher_node(addr: int, n_nodes: int) -> int:
     """Directory owner for a block: node_id == block_address (mod n)  (§5.1)."""
     return block_address(addr) % n_nodes
+
+
+def ring_hash(key) -> int:
+    """Stable 64-bit ring position of a DSM key (a name or a block address).
+
+    The paper's ``node_id ≡ block_address (mod n)`` assignment reshuffles
+    *every* block when ``n`` changes; the sharded store instead places keys on
+    a consistent-hash ring, so a shard join/leave moves only the ~1/S of keys
+    whose arc changed owner.  ``blake2b`` keeps the placement stable across
+    processes (Python's built-in ``hash`` is salted per run), which is what
+    lets a recovered session adopt a surviving store without re-hashing it.
+    """
+    if isinstance(key, int):
+        data = key.to_bytes(8, "little", signed=False)
+    else:
+        data = str(key).encode("utf-8")
+    return int.from_bytes(hashlib.blake2b(data, digest_size=8).digest(), "big")
 
 
 def align_up(n: int, multiple: int) -> int:

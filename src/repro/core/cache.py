@@ -8,6 +8,16 @@ per-entry epoch; a write bumps the epoch (write-through) and the directory
 records which nodes must invalidate.  Hit/miss/invalidate counters make the
 paper's throughput argument measurable in tests and benchmarks.
 
+Since ``step.shards`` landed, the directory is **shard-local**: the watcher
+for a name is the consistent-hash shard that owns it (the ring plays the role
+``node_id ≡ block_address (mod n)`` played in §5.1), the directory record
+lives on that :class:`~repro.core.shards.Shard` and is guarded by *its* lock
+— so coherence traffic for names on different shards never serialises on a
+common lock, and a ring rebalance migrates each record together with its
+entry.  Node replica LRUs are guarded by small per-node locks; lock order is
+strictly shard → node, and eviction cleanup for a name owned by a *different*
+shard happens after the held shard lock is released.
+
 Inside a jitted step the analogous mechanism is the decode KV/SSM-state cache
 (models/) and the per-step local parameter replica refreshed by the
 accumulator's all-gather phase — see DESIGN.md §2.
@@ -15,12 +25,12 @@ accumulator's all-gather phase — see DESIGN.md §2.
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Set
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
-from repro.core.addressing import watcher_node
-from repro.core.dsm import GlobalStore
+from repro.core.shards import ShardedStore
 
 
 @dataclass
@@ -39,107 +49,164 @@ class CacheStats:
 
 
 class _NodeCache:
-    """One node's bounded LRU of (name -> (epoch, value)) replicas."""
+    """One node's bounded LRU of (name -> (epoch, value)) replicas.
+
+    Carries its own lock: with a sharded store, threads working on different
+    shards may race into the same node's LRU (the replica set is per *node*,
+    not per shard)."""
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         self.blocks: OrderedDict[str, tuple[int, object]] = OrderedDict()
+        self._lock = threading.Lock()
 
     def get(self, name: str):
-        if name in self.blocks:
-            self.blocks.move_to_end(name)
-            return self.blocks[name]
-        return None
+        with self._lock:
+            if name in self.blocks:
+                self.blocks.move_to_end(name)
+                return self.blocks[name]
+            return None
 
     def put(self, name: str, epoch: int, value) -> Optional[str]:
         """Insert a replica; returns the evicted name (LRU) or None.  The
         caller must drop the evicted name from the watcher directory, or the
         node stays listed as a holder forever."""
-        evicted = None
-        if name not in self.blocks and len(self.blocks) >= self.capacity:
-            evicted, _ = self.blocks.popitem(last=False)  # LRU eviction
-        self.blocks[name] = (epoch, value)
-        self.blocks.move_to_end(name)
-        return evicted
+        with self._lock:
+            evicted = None
+            if name not in self.blocks and len(self.blocks) >= self.capacity:
+                evicted, _ = self.blocks.popitem(last=False)  # LRU eviction
+            self.blocks[name] = (epoch, value)
+            self.blocks.move_to_end(name)
+            return evicted
 
     def invalidate(self, name: str) -> bool:
-        return self.blocks.pop(name, None) is not None
+        with self._lock:
+            return self.blocks.pop(name, None) is not None
+
+    def contains(self, name: str) -> bool:
+        """Membership without touching LRU order (eviction-cleanup guard)."""
+        with self._lock:
+            return name in self.blocks
 
 
 class DSMCache:
-    """Directory-based write-invalidate cache over a :class:`GlobalStore`.
+    """Directory-based write-invalidate cache over a sharded store.
 
     ``n_nodes`` logical nodes each hold ``capacity`` replicas (paper: 1024
-    blocks/node).  The watcher node for a name is derived from its DSM block
-    address, exactly as §5.1's ``node_id ≡ block_address (mod n)``.
+    blocks/node).  The watcher for a name is its owning shard; the directory
+    record lives on that shard, under that shard's lock.  Constructing the
+    cache registers a store-side delete hook, so even a *direct*
+    ``store.delete(name)`` (bypassing ``Session.delete``) tears down every
+    replica and directory holder of the name.
     """
 
-    def __init__(self, store: GlobalStore, n_nodes: int, capacity: int = 1024):
+    def __init__(self, store: ShardedStore, n_nodes: int, capacity: int = 1024):
         self.store = store
         self.n_nodes = n_nodes
         self.caches = [_NodeCache(capacity) for _ in range(n_nodes)]
-        # directory[watcher][name] = set of node ids holding a replica
-        self.directory: list[Dict[str, Set[int]]] = [dict() for _ in range(n_nodes)]
-        self.stats = CacheStats()
+        # per-shard coherence counters, aggregated by the `stats` property
+        self._stats: Dict[int, CacheStats] = {}
+        # weak: the store outlives sessions rolled over it (FT recovery);
+        # this cache's teardown hook must die with the cache, not pin it
+        store.add_delete_hook(self.drop, weak=True)
 
-    def _watcher(self, name: str) -> int:
-        return watcher_node(self.store.address(name), self.n_nodes)
+    def _shard_stats(self, shard_id: int) -> CacheStats:
+        return self._stats.setdefault(shard_id, CacheStats())
+
+    @property
+    def stats(self) -> CacheStats:
+        """Aggregate coherence counters across shards."""
+        total = CacheStats()
+        for s in self._stats.values():
+            total.hits += s.hits
+            total.misses += s.misses
+            total.invalidations += s.invalidations
+            total.write_messages += s.write_messages
+            total.missing_messages += s.missing_messages
+            total.evictions += s.evictions
+        return total
+
+    def shard_stats(self) -> Dict[int, CacheStats]:
+        """Per-shard coherence counters, keyed by shard id."""
+        return dict(self._stats)
+
+    @property
+    def directory(self) -> List[Dict[str, set]]:
+        """The shard-local watcher directories (one dict per active shard)."""
+        return [self.store._shards[sid].directory
+                for sid in self.store.shard_ids()]
 
     def _forget_holder(self, node_id: int, name: str) -> None:
-        """Remove ``node_id`` from ``name``'s watcher directory (the replica
-        is gone).  A name no longer in the store has no derivable watcher, so
-        fall back to scanning every directory."""
-        try:
-            dirs = [self.directory[self._watcher(name)]]
-        except KeyError:
-            dirs = self.directory
-        for d in dirs:
-            holders = d.get(name)
+        """Remove ``node_id`` from ``name``'s shard directory (the replica is
+        gone).  Resolves the owner through the ring — a deleted name still
+        hashes to a shard, so no directory scan is needed.
+
+        Guarded against the eviction/re-read race: cleanup runs *after* the
+        evicting op released its shard lock, so the same node may have
+        re-read the name in between.  Re-reads register their holdership
+        under this same shard lock, so checking the node's LRU here decides
+        atomically — if the replica is back, the holder record must stay."""
+        with self.store.locked_owner(name) as shard:
+            if self.caches[node_id].contains(name):
+                return
+            holders = shard.directory.get(name)
             if holders is not None:
                 holders.discard(node_id)
                 if not holders:
-                    del d[name]
+                    del shard.directory[name]
 
     def _note_eviction(self, node_id: int, evicted: Optional[str]) -> None:
         if evicted is None:
             return
-        self.stats.evictions += 1
+        with self.store.locked_owner(evicted) as shard:
+            self._shard_stats(shard.id).evictions += 1
         self._forget_holder(node_id, evicted)
 
     # -- reads ---------------------------------------------------------------
 
     def read(self, node_id: int, name: str):
-        cached = self.caches[node_id].get(name)
-        current_epoch = self.store.epoch(name)
-        if cached is not None and cached[0] == current_epoch:
-            self.stats.hits += 1
-            return cached[1]
-        # miss: fetch through the DSM internal layer + tell the watcher
-        self.stats.misses += 1
-        self.stats.missing_messages += 1
-        value = self.store.get(name)
-        self._note_eviction(node_id, self.caches[node_id].put(name, current_epoch, value))
-        w = self._watcher(name)
-        self.directory[w].setdefault(name, set()).add(node_id)
-        return value
+        evicted = None
+        try:
+            with self.store.locked_entry(name) as (shard, entry):
+                stats = self._shard_stats(shard.id)
+                cached = self.caches[node_id].get(name)
+                if cached is not None and cached[0] == entry.epoch:
+                    stats.hits += 1
+                    return cached[1]
+                # miss: fetch through the DSM internal layer + tell the watcher
+                stats.misses += 1
+                stats.missing_messages += 1
+                value = self.store.get(name)   # re-entrant on the held shard lock
+                evicted = self.caches[node_id].put(name, entry.epoch, value)
+                shard.directory.setdefault(name, set()).add(node_id)
+                return value
+        finally:
+            # the evicted name may be owned by a different shard: clean up
+            # after this shard's lock is released (lock order: one shard at
+            # a time, never shard → shard)
+            self._note_eviction(node_id, evicted)
 
     # -- writes (write-through + invalidate) ----------------------------------
 
     def write(self, node_id: int, name: str, value) -> None:
-        self.store.set(name, value)                    # write-through
-        epoch = self.store.epoch(name)
-        w = self._watcher(name)
-        self.stats.write_messages += 1
-        holders = self.directory[w].get(name, set())
-        for holder in list(holders):
-            if holder != node_id:
-                if self.caches[holder].invalidate(name):
-                    self.stats.invalidations += 1
-                holders.discard(holder)
-        # the writer keeps (updates) its own replica
-        self._note_eviction(node_id, self.caches[node_id].put(name, epoch, value))
-        holders.add(node_id)
-        self.directory[w][name] = holders
+        evicted = None
+        try:
+            with self.store.locked_entry(name) as (shard, entry):
+                stats = self._shard_stats(shard.id)
+                self.store.set(name, value)                    # write-through
+                stats.write_messages += 1
+                holders = shard.directory.get(name, set())
+                for holder in list(holders):
+                    if holder != node_id:
+                        if self.caches[holder].invalidate(name):
+                            stats.invalidations += 1
+                        holders.discard(holder)
+                # the writer keeps (updates) its own replica
+                evicted = self.caches[node_id].put(name, entry.epoch, value)
+                holders.add(node_id)
+                shard.directory[name] = holders
+        finally:
+            self._note_eviction(node_id, evicted)
 
     # -- bypass (atomic ops skip the cache, per §5.1) --------------------------
 
@@ -151,11 +218,12 @@ class DSMCache:
     # -- teardown (DelArray / DelObj) ------------------------------------------
 
     def drop(self, name: str) -> None:
-        """Purge every node's replica of ``name`` and every directory record —
-        the coherence half of a DSM delete.  Without it, a deleted-then-
-        re-declared name leaves phantom holders and (pre-generation-epochs)
-        could serve the deleted era's value."""
+        """Purge every node's replica of ``name`` and its directory record —
+        the coherence half of a DSM delete.  Registered as a store delete
+        hook, so it also fires for direct ``store.delete`` calls; without it,
+        a deleted-then-re-declared name leaves phantom holders and
+        (pre-generation-epochs) could serve the deleted era's value."""
         for c in self.caches:
             c.invalidate(name)
-        for d in self.directory:
-            d.pop(name, None)
+        with self.store.locked_owner(name) as shard:
+            shard.directory.pop(name, None)

@@ -19,206 +19,46 @@ Three STEP concepts are kept first-class:
 * **host/device split** — between barriers the store owns the arrays (the KV
   store's role); inside a jitted step, state is threaded functionally and the
   store is only consulted for packing metadata.
+
+Since the ``step.shards`` subsystem landed, :class:`GlobalStore` is a thin
+facade over :class:`repro.core.shards.ShardedStore`: the namespace is
+partitioned over a consistent-hash ring of S shards (``shards=1`` by default,
+behaviour-identical to the seed's flat store), each shard owning its entries,
+epoch generations, watcher directory and its own lock.  See
+:mod:`repro.core.shards` for the ring, the per-shard locking discipline and
+elastic rebalancing.
 """
 
 from __future__ import annotations
 
-import threading
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.addressing import (
-    AddressAllocator,
-    FieldSlot,
-    GLOBALS_OBJECT_ID,
-    TPU_PACKAGE_ELEMS,
-    WORD_BYTES,
-    align_up,
+from repro.core.addressing import TPU_PACKAGE_ELEMS, align_up
+from repro.core.shards import (  # noqa: F401  (re-exported, public surface)
+    GlobalEntry,
+    HashRing,
+    Shard,
+    ShardedStore,
+    ShardMigration,
+    _nbytes,
 )
 
 
-@dataclass
-class GlobalEntry:
-    """One named piece of shared data plus its DSM directory record."""
-
-    name: str
-    slot: FieldSlot
-    sharding: Optional[NamedSharding]
-    value: Any  # jax.Array | ShapeDtypeStruct (abstract mode)
-    epoch: int = 0  # bumped on every Set — drives cache invalidation
-    # re-placement metadata: the declared spec (arrays) / per-field specs
-    # (objects), so Set/Inc restore the same NamedSharding they started with
-    spec: Optional[P] = None
-    field_specs: Optional[Dict[str, P]] = None
-
-
-class GlobalStore:
+class GlobalStore(ShardedStore):
     """The DSM: a named global address space of (optionally sharded) arrays.
 
-    ``mesh=None`` gives a single-device store (the paper's single-node
-    degenerate case) used by unit tests and the analytics examples on CPU.
+    A thin facade over :class:`~repro.core.shards.ShardedStore` — the Table-1
+    store API (``def_global`` / ``new_array`` / ``new_object`` / ``get`` /
+    ``set`` / ``mget`` / ``inc`` / ``delete``) routed through the consistent-
+    hash ring.  ``shards=1`` (the default) is the paper's single-store setup;
+    ``shards=S`` partitions the namespace so operations on names owned by
+    different shards never contend on a common lock.
     """
-
-    def __init__(self, mesh: Optional[Mesh] = None, *, granularity: str = "coarse"):
-        if granularity not in ("coarse", "fine"):
-            raise ValueError(f"granularity must be coarse|fine, got {granularity}")
-        self.mesh = mesh
-        self.granularity = granularity
-        self._alloc = AddressAllocator(coarse=(granularity == "coarse"))
-        self._entries: Dict[str, GlobalEntry] = {}
-        # per-name monotonic generation: a name deleted at epoch e re-declares
-        # at e+1, so no cache replica of the deleted era can ever validate as
-        # fresh against the new entry (delete→redeclare stale-read fix)
-        self._gen: Dict[str, int] = {}
-        self._lock = threading.Lock()  # serialises Inc (atomic by contract)
-        # stats mirroring the paper's DSM throughput discussion
-        self.stats = {"get": 0, "set": 0, "inc": 0,
-                      "bytes_get": 0, "bytes_set": 0, "transfers": 0}
-
-    # -- declaration ----------------------------------------------------------
-
-    def _sharding(self, spec: Optional[P]) -> Optional[NamedSharding]:
-        if self.mesh is None:
-            return None
-        return NamedSharding(self.mesh, spec if spec is not None else P())
-
-    def _num_words(self, shape, dtype) -> int:
-        nbytes = int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype).itemsize if shape else jnp.dtype(dtype).itemsize
-        return max(1, (nbytes + WORD_BYTES - 1) // WORD_BYTES)
-
-    def _fresh_epoch(self, name: str) -> int:
-        """Starting epoch for a (re-)declared name: strictly above every epoch
-        the name has ever had, so stale replicas can never validate."""
-        prev = self._gen.get(name, 0)
-        if name in self._entries:
-            prev = max(prev, self._entries[name].epoch + 1)
-        return prev
-
-    def def_global(self, name: str, value, *, spec: Optional[P] = None) -> str:
-        """``DefGlobal(NAME, TYPE)`` — declare a shared variable and set it."""
-        value = jnp.asarray(value)
-        epoch = self._fresh_epoch(name)
-        slot = self._alloc.alloc_field(GLOBALS_OBJECT_ID, self._num_words(value.shape, value.dtype))
-        self._entries[name] = GlobalEntry(name, slot, self._sharding(spec),
-                                          self._place(value, spec), epoch=epoch,
-                                          spec=spec)
-        return name
-
-    def new_array(self, name: str, shape, dtype=jnp.float32, *, spec: Optional[P] = None) -> str:
-        """``NewArray<TYPE>(n)`` — allocate a zeroed shared array."""
-        epoch = self._fresh_epoch(name)
-        oid = self._alloc.new_object()
-        slot = self._alloc.alloc_field(oid, self._num_words(shape, dtype))
-        value = jnp.zeros(shape, dtype)
-        self._entries[name] = GlobalEntry(name, slot, self._sharding(spec),
-                                          self._place(value, spec), epoch=epoch,
-                                          spec=spec)
-        return name
-
-    def new_object(self, name: str, fields: Dict[str, Any], *, specs: Optional[Dict[str, P]] = None) -> str:
-        """``NewObj`` — a shared object: a pytree of fields under one object_id."""
-        epoch = self._fresh_epoch(name)
-        oid = self._alloc.new_object()
-        specs = specs or {}
-        placed = {}
-        words = 0
-        for fname, fval in fields.items():
-            fval = jnp.asarray(fval)
-            words += self._num_words(fval.shape, fval.dtype)
-            placed[fname] = self._place(fval, specs.get(fname))
-        slot = self._alloc.alloc_field(oid, words)
-        self._entries[name] = GlobalEntry(name, slot, None, placed, epoch=epoch,
-                                          field_specs=dict(specs))
-        return name
-
-    def delete(self, name: str) -> None:
-        """``DelArray`` / ``DelObj``.  Records the retired epoch so a later
-        re-declaration of the same name starts strictly past it."""
-        e = self._entries.pop(name)
-        self._gen[name] = max(self._gen.get(name, 0), e.epoch + 1)
-
-    # -- access (the DSM-internal-layer Get/Set of Table 1) -------------------
-
-    def _place(self, value, spec: Optional[P]):
-        if self.mesh is None:
-            return value
-        return jax.device_put(value, self._sharding(spec))
-
-    def get(self, name: str):
-        e = self._entries[name]
-        self.stats["get"] += 1
-        self.stats["bytes_get"] += _nbytes(e.value)
-        self.stats["transfers"] += self._transfer_count(e.value)
-        return e.value
-
-    def set(self, name: str, value, *, bump_epoch: bool = True) -> None:
-        e = self._entries[name]
-        if isinstance(e.value, dict):
-            specs = e.field_specs or {}
-            e.value = {k: self._place(jnp.asarray(v), specs.get(k))
-                       for k, v in value.items()}
-        else:
-            value = jnp.asarray(value)
-            if e.sharding is not None:
-                value = jax.device_put(value, e.sharding)
-            e.value = value
-        if bump_epoch:
-            e.epoch += 1
-        self.stats["set"] += 1
-        self.stats["bytes_set"] += _nbytes(e.value)
-        self.stats["transfers"] += self._transfer_count(e.value)
-
-    def mget(self, names) -> list:
-        """``MGet`` — batched get (one logical round trip)."""
-        vals = [self._entries[n].value for n in names]
-        self.stats["get"] += 1
-        self.stats["transfers"] += 1
-        for v in vals:
-            self.stats["bytes_get"] += _nbytes(v)
-        return vals
-
-    def inc(self, name: str, amount=1):
-        """Atomic increment (Table 1) — skips the cache layer by contract.
-
-        Serialised under the store lock, re-placed with the entry's declared
-        spec (an incremented sharded entry keeps its NamedSharding), and
-        accounted in ``stats`` like any other DSM write.
-        """
-        with self._lock:
-            e = self._entries[name]
-            e.value = self._place(jnp.asarray(e.value) + amount, e.spec)
-            e.epoch += 1
-            self.stats["inc"] += 1
-            self.stats["bytes_set"] += _nbytes(e.value)
-            self.stats["transfers"] += self._transfer_count(e.value)
-            return e.value
-
-    def epoch(self, name: str) -> int:
-        return self._entries[name].epoch
-
-    def address(self, name: str) -> int:
-        return self._entries[name].slot.address
-
-    def names(self):
-        return list(self._entries)
-
-    def _transfer_count(self, value) -> int:
-        """How many physical transfers a get/set of `value` costs under the
-        current granularity — the quantity Fig. 3 is about."""
-        leaves = jax.tree.leaves(value)
-        if self.granularity == "coarse":
-            return len(leaves)  # one package-aligned bulk transfer per leaf
-        # fine-grained: one word-sized KV op per word
-        return int(sum(max(1, _nbytes(l) // WORD_BYTES) for l in leaves))
-
-
-def _nbytes(v) -> int:
-    return int(sum(l.size * jnp.dtype(l.dtype).itemsize for l in jax.tree.leaves(v)))
 
 
 # ---------------------------------------------------------------------------

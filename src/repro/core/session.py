@@ -51,7 +51,7 @@ from __future__ import annotations
 
 import threading
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
 import jax
@@ -59,10 +59,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate as spmd_accumulate
-from repro.core.cache import DSMCache
+from repro.core.cache import CacheStats, DSMCache
 from repro.core.compat import make_mesh, shard_map
 from repro.core.dsm import GlobalStore
-from repro.core.sparse import pair_capacity
+from repro.core.sparse import default_auto_k, pair_capacity
 from repro.core.sync import DBarrier, DSemaphore, SSPClock
 from repro.core.threads import DThreadPool, ThreadState
 from repro.data.pipeline import partition_rows
@@ -129,6 +129,11 @@ class SharedRef:
     @property
     def epoch(self) -> int:
         return self._session.store.epoch(self.name)
+
+    @property
+    def shard(self) -> int:
+        """Owning shard id under the store's consistent-hash ring."""
+        return self._session.store.shard_of(self.name)
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"SharedRef({self.name!r}, addr=0x{self.address:x})"
@@ -236,8 +241,9 @@ class HostWorkerCtx(WorkerCtx):
         self._session._cached_write(self.node_id, name, value)
 
     def inc(self, name: str, amount):
-        with self._session._cache_lock:
-            return self._session.cache.atomic_inc(name, amount)
+        # atomicity comes from the owning shard's lock inside store.inc —
+        # increments to names on different shards proceed concurrently
+        return self._session.cache.atomic_inc(name, amount)
 
     def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
         accu = self._backend.accumulator(self._session, name, mode, k)
@@ -255,6 +261,11 @@ class SpmdWorkerCtx(WorkerCtx):
         self._backend = backend
         self.values = values
         self._accum_repeat = 1  # trip-count multiplier for traffic accounting
+        # AUTO branch slots: one per auto-accumulate call site, carrying the
+        # *device-side* count of rounds that took the sparse branch plus the
+        # static per-round costs of either branch.  `join` settles the
+        # trace-time dense upper bound against these counts (ROADMAP item).
+        self._auto_slots: List[Dict[str, Any]] = []
 
     # -- iteration: one lax.scan, O(1) lowered size in `iters` ---------------
 
@@ -267,22 +278,33 @@ class SpmdWorkerCtx(WorkerCtx):
         # advances per round exactly as it does on the host backend.
         values0 = jax.tree.map(jnp.asarray, dict(self.values))
         carry0 = jax.tree.map(jnp.asarray, carry)
+        slot_meta: List[Dict[str, Any]] = []
 
         def body(state, i):
             inner_carry, values = state
             outer_values, self.values = self.values, dict(values)
             outer_repeat = self._accum_repeat
             self._accum_repeat = outer_repeat * iters  # nested loops compose
+            base = len(self._auto_slots)
             try:
                 new_carry = step(i, inner_carry)
                 new_values = dict(self.values)
             finally:
                 self.values = outer_values
                 self._accum_repeat = outer_repeat
-            return (new_carry, new_values), None
+            # AUTO branch counters born inside the body ride the scan's
+            # stacked outputs; summed below they report how many of the
+            # `iters` executions of each call site took the sparse branch
+            born = self._auto_slots[base:]
+            del self._auto_slots[base:]
+            slot_meta[:] = [{k: v for k, v in s.items() if k != "count"}
+                            for s in born]
+            return (new_carry, new_values), tuple(s["count"] for s in born)
 
-        (carry, values), _ = jax.lax.scan(body, (carry0, values0),
-                                          jnp.arange(iters))
+        (carry, values), counts = jax.lax.scan(body, (carry0, values0),
+                                               jnp.arange(iters))
+        for meta, per_iter in zip(slot_meta, counts):
+            self._auto_slots.append(dict(meta, count=jnp.sum(per_iter)))
         self.values.clear()
         self.values.update(values)
         return carry
@@ -306,12 +328,31 @@ class SpmdWorkerCtx(WorkerCtx):
 
     def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
         vec = local if local.ndim else local[None]   # collectives want rank>=1
-        total = spmd_accumulate(vec, self._backend.axis, mode, k=k)
+        shard = self._session.store.shard_of(name)
+        if mode == AccumMode.AUTO:
+            # the collective's lax.cond branch is a runtime decision: record a
+            # device-side counter (0/1 this execution; ctx.fori sums it across
+            # scan rounds) so join() can settle the trace-time dense bound to
+            # the branch actually taken, matching host accounting.
+            total, took_sparse = spmd_accumulate(vec, self._backend.axis, mode,
+                                                 k=k, with_branch=True)
+            vec_len = int(local.size)
+            k_eff = k if k is not None else default_auto_k(vec_len)
+            n = self.n_threads
+            self._auto_slots.append({
+                "count": took_sparse.astype(jnp.int32),
+                "per_sparse": 2 * pair_capacity(vec_len, k_eff) * n + vec_len,
+                "per_dense": (n + 1) * vec_len,
+                "rounds": self._accum_repeat,
+                "shard": shard,
+            })
+        else:
+            total = spmd_accumulate(vec, self._backend.axis, mode, k=k)
         if not local.ndim:
             total = total[0]
         self.values[name] = total
         self._backend.stats.account(mode, self.n_threads, int(local.size), k,
-                                    repeat=self._accum_repeat)
+                                    repeat=self._accum_repeat, shard=shard)
         return total
 
 
@@ -446,14 +487,34 @@ class SpmdTraffic:
     """Per-call traffic accounting for the SPMD accumulator, mirroring the
     host accumulator's cost model.  Accounting happens at trace time, where
     the data is unknown: ``sparse`` is costed at its top-k budget, and
-    ``auto`` at the dense figure — a true upper bound, since the runtime
-    branch only picks sparse when it is cheaper."""
+    ``auto`` provisionally at the dense figure — then settled at ``join``
+    time against the device-side branch counter each auto call site threads
+    through the program (see :meth:`settle_auto`), so ``wire_traffic()``
+    reports the branch actually taken, as the host does.
+
+    ``by_shard`` attributes each call site's traffic to the shard owning the
+    output ref — the per-shard half of ``Session.shard_stats()``."""
 
     bytes_transferred: int = 0
     rounds: int = 0
+    by_shard: Dict[int, int] = field(default_factory=dict)
+
+    def _charge(self, amount: int, shard: Optional[int]) -> None:
+        self.bytes_transferred += amount
+        if shard is not None:
+            self.by_shard[shard] = self.by_shard.get(shard, 0) + amount
+
+    def settle_auto(self, slot: Dict[str, Any], sparse_rounds: int) -> None:
+        """Replace one auto call site's trace-time dense upper bound with the
+        cost of the branches actually taken: ``sparse_rounds`` of its
+        ``rounds`` executions took the pairs path, the rest went dense."""
+        actual = (sparse_rounds * slot["per_sparse"]
+                  + (slot["rounds"] - sparse_rounds) * slot["per_dense"])
+        self._charge(actual - slot["rounds"] * slot["per_dense"],
+                     slot.get("shard"))
 
     def account(self, mode: AccumMode, n: int, vec_len: int, k: Optional[int],
-                *, repeat: int = 1) -> None:
+                *, repeat: int = 1, shard: Optional[int] = None) -> None:
         """Charge one accumulate call site.  ``vec_len`` is the total element
         count of the local contribution (scalars cost 1, like the host
         accumulator).  ``repeat`` multiplies by the trip count when the call
@@ -470,9 +531,9 @@ class SpmdTraffic:
             per_round = (2 * n + 1) * vec_len
         elif mode == AccumMode.SPARSE:
             per_round = 2 * pair_capacity(vec_len, k) * n + vec_len
-        else:  # REDUCE_SCATTER / HIERARCHICAL / AUTO (dense upper bound)
+        else:  # REDUCE_SCATTER / HIERARCHICAL / AUTO (dense, settled at join)
             per_round = (n + 1) * vec_len
-        self.bytes_transferred += per_round * repeat
+        self._charge(per_round * repeat, shard)
         self.rounds += repeat
 
 
@@ -517,8 +578,10 @@ class SpmdBackend:
                  data: Sequence, broadcast: Sequence):
         """Build the jitted shard_map program for one spawn.
 
-        Returns ``(f, data, names)`` — the compiled callable, the (possibly
-        trimmed) data arrays, and the shared names captured in the trace.
+        Returns ``(f, data, names, auto_box)`` — the compiled callable, the
+        (possibly trimmed) data arrays, the shared names captured in the
+        trace, and the static metadata of every AUTO branch-counter slot (the
+        traced counts themselves come out as the program's third output).
         """
         n = self.n_threads
         # shard_map splits evenly: trim ragged rows (the host backend gives the
@@ -534,6 +597,7 @@ class SpmdBackend:
         data = tuple(a[: (a.shape[0] // n) * n] for a in data)
         names = session.store.names()
         shared0 = {m: session.store.get(m) for m in names}
+        auto_box: List[Dict[str, Any]] = []
 
         def body(*args):
             tid = jax.lax.axis_index(self.axis)
@@ -543,19 +607,25 @@ class SpmdBackend:
                 result = thread_proc(ctx, *args)
             finally:
                 session._tls.ctx = None
+            # the AUTO branch counters leave the program as a third output;
+            # their static cost metadata rides out-of-band through auto_box
+            auto_box[:] = [{k: v for k, v in s.items() if k != "count"}
+                           for s in ctx._auto_slots]
+            counts = tuple(s["count"] for s in ctx._auto_slots)
             # stack every leaf along the mesh axis so out_specs is uniform
-            return jax.tree.map(lambda x: jnp.asarray(x)[None], (result, ctx.values))
+            return jax.tree.map(lambda x: jnp.asarray(x)[None],
+                                (result, ctx.values, counts))
 
         in_specs = tuple(P(self.axis) for _ in data) + tuple(P() for _ in broadcast)
         f = jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
                               out_specs=P(self.axis), check_vma=False))
-        return f, data, names
+        return f, data, names, auto_box
 
     def lower(self, session: "Session", thread_proc: Callable,
               data: Sequence, broadcast: Sequence):
         """Trace + lower ``thread_proc`` without running it: the hook for
         compile-cost inspection (``lowered.as_text()`` / ``.compile()``)."""
-        f, data, _ = self._compile(session, thread_proc, data, broadcast)
+        f, data, _, _ = self._compile(session, thread_proc, data, broadcast)
         # accounting fires at trace time: inspection must not charge the
         # session's wire-traffic figures, so trace against throwaway stats
         stats, self.stats = self.stats, SpmdTraffic()
@@ -570,8 +640,13 @@ class SpmdBackend:
         thread_proc, data, broadcast = self._pending
         self._pending = None
         n = self.n_threads
-        f, data, names = self._compile(session, thread_proc, data, broadcast)
-        stacked_result, stacked_shared = f(*data, *broadcast)
+        f, data, names, auto_box = self._compile(session, thread_proc, data, broadcast)
+        stacked_result, stacked_shared, stacked_counts = f(*data, *broadcast)
+        # settle every AUTO call site's trace-time dense bound against the
+        # branch counter the device actually accumulated (globally agreed, so
+        # replica 0's count is everyone's count)
+        for meta, counts in zip(auto_box, stacked_counts):
+            self.stats.settle_auto(meta, int(jax.device_get(counts)[0]))
         for m in names:
             session.store.set(m, jax.tree.map(lambda x: x[0], stacked_shared[m]))
         return [jax.tree.map(lambda x, i=i: x[i], stacked_result) for i in range(n)]
@@ -601,6 +676,11 @@ class Session:
     store:
         Optionally adopt an existing :class:`GlobalStore` (FT recovery rolls
         a new session onto the surviving store this way).
+    shards:
+        Number of consistent-hash shards in a freshly built store (ignored
+        when adopting ``store``).  ``1`` is the paper's single flat store;
+        larger counts let workers touching different shards read/write/inc
+        concurrently — there is no session-global cache lock.
     """
 
     def __init__(self, backend: Backend | str = "host", *,
@@ -608,6 +688,7 @@ class Session:
                  mesh=None, axis: str = "data",
                  store: Optional[GlobalStore] = None,
                  granularity: str = "coarse",
+                 shards: int = 1,
                  accum_mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
                  cache_capacity: int = 1024):
         if isinstance(backend, str):
@@ -618,11 +699,11 @@ class Session:
             else:
                 raise ValueError(f"backend must be host|spmd, got {backend!r}")
         self.backend = backend
-        self.store = store if store is not None else GlobalStore(granularity=granularity)
+        self.store = store if store is not None else GlobalStore(
+            granularity=granularity, shards=shards)
         self.accum_mode = AccumMode(accum_mode)
         self.cache = DSMCache(self.store, n_nodes=backend.n_nodes,
                               capacity=cache_capacity)
-        self._cache_lock = threading.Lock()
         self._sparse_k: Dict[str, int] = {}  # per-ref default top-k budgets
         self._tls = threading.local()
 
@@ -675,13 +756,15 @@ class Session:
     def delete(self, name: str) -> None:
         """``DelArray`` / ``DelObj`` + coherence teardown: every node's cache
         replica and every directory record of the name is purged, so a later
-        re-declaration under the same name starts with no stale state."""
-        with self._cache_lock:   # don't race concurrent worker reads/writes:
-            # store.delete must happen under the same lock, or a read between
-            # drop and delete would re-populate the replica + directory entry
-            self.cache.drop(name)
-            self.store.delete(name)
-            self._sparse_k.pop(name, None)
+        re-declaration under the same name starts with no stale state.
+
+        The teardown is the store's delete hook (the cache registered
+        :meth:`DSMCache.drop` at construction), fired under the owning
+        shard's lock — a concurrent worker read of the same name either
+        completes before the delete or misses afterwards, never re-populates
+        a deleted-era replica."""
+        self.store.delete(name)
+        self._sparse_k.pop(name, None)
 
     # -- Table 1: cluster & thread management ---------------------------------
 
@@ -768,6 +851,27 @@ class Session:
         return {"store": dict(self.store.stats), "cache": self.cache.stats,
                 "wire_traffic": self.wire_traffic()}
 
+    def shard_stats(self) -> Dict[int, Dict[str, Any]]:
+        """Per-shard view of the session, keyed by shard id: the store's op
+        counters (+ entry count + migration counts), the cache's coherence
+        counters, and accumulator wire traffic attributed to the shard owning
+        each output ref."""
+        cache_rows = self.cache.shard_stats()
+        out: Dict[int, Dict[str, Any]] = {
+            sid: {"store": row, "cache": cache_rows.get(sid, CacheStats()),
+                  "wire_traffic": 0}
+            for sid, row in self.store.shard_stats().items()}
+        if self.backend.kind == "host":
+            for (name, _, _), accu in self.backend._accumulators.items():
+                sid = self.store.shard_of(name)
+                if sid in out:
+                    out[sid]["wire_traffic"] += accu.bytes_transferred
+        else:
+            for sid, elems in self.backend.stats.by_shard.items():
+                if sid in out:
+                    out[sid]["wire_traffic"] += elems
+        return out
+
     # -- ref-op dispatch (driver vs active worker ctx) ------------------------
 
     def _ctx(self):
@@ -800,12 +904,13 @@ class Session:
                               AccumMode(mode) if mode is not None else self.accum_mode, k)
 
     def _cached_read(self, node_id: int, name: str):
-        with self._cache_lock:
-            return self.cache.read(node_id, name)
+        # locking lives in the cache/store layer: the owning shard's lock,
+        # not a session-global one — reads of names on different shards
+        # proceed concurrently
+        return self.cache.read(node_id, name)
 
     def _cached_write(self, node_id: int, name: str, value) -> None:
-        with self._cache_lock:
-            self.cache.write(node_id, name, value)
+        self.cache.write(node_id, name, value)
 
     # paper-cased aliases (Table 1)
     DefGlobal = def_global

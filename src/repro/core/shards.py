@@ -1,0 +1,566 @@
+"""step.shards — the partitioned KV store beneath the DSM (paper §5.1 scaled).
+
+STEP's key idea is that "the underlying key-value store serves as distributed
+shared memory".  The seed repro kept that store as one flat dict behind one
+lock, which serialises every cached read/write across all nodes and names —
+the exact bottleneck a partitioned store exists to remove.  This module is the
+partitioned form:
+
+* :class:`HashRing` — a consistent-hash ring (``vnodes`` virtual points per
+  shard, :func:`~repro.core.addressing.ring_hash` positions) mapping every DSM
+  name to its owning shard.  Ring objects are immutable; topology changes
+  build a *new* ring, so readers can take a lock-free snapshot (``self._ring``)
+  and validate it after locking.
+* :class:`Shard` — one partition: its entries, its delete-era generations,
+  its watcher directory and **its own lock**.  Reads/writes/increments/cache
+  invalidations for names on different shards never touch a common lock.
+* :class:`ShardedStore` — the store facade over the ring.  API-identical to
+  the seed's ``GlobalStore`` (which is now a thin subclass in
+  :mod:`repro.core.dsm`); with ``shards=1`` it is behaviour-identical to the
+  flat store.
+* **Elastic rebalancing** — ``add_shard`` / ``remove_shard`` migrate only the
+  keys whose ring arc changed owner (~1/S of the namespace), moving each
+  entry *with its epoch*, its delete-era generation and its directory record,
+  so no stale cache replica can survive a migration and a post-migration
+  redeclare still starts past every epoch the name ever had.
+
+Keys are placed by *name* rather than by allocated block address: names are
+the stable identity of shared data (addresses depend on allocation order and
+change on redeclare), and placement must be derivable before allocation and
+after adoption by a recovered session.  The name plays the role the block
+address played in §5.1's ``watcher_node``.
+
+Locking order is strictly ``shard → node-cache``; the rebalancer takes every
+involved shard lock in sorted id order and publishes the new ring before
+releasing, so in-flight operations either finish under the old topology or
+retry under the new one (see ``locked_entry``).
+"""
+
+from __future__ import annotations
+
+import bisect
+import threading
+import weakref
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.addressing import (
+    AddressAllocator,
+    FieldSlot,
+    GLOBALS_OBJECT_ID,
+    WORD_BYTES,
+    ring_hash,
+)
+
+DEFAULT_VNODES = 128
+
+
+def _nbytes(v) -> int:
+    return int(sum(l.size * jnp.dtype(l.dtype).itemsize for l in jax.tree.leaves(v)))
+
+
+@dataclass
+class GlobalEntry:
+    """One named piece of shared data plus its DSM directory record."""
+
+    name: str
+    slot: FieldSlot
+    sharding: Optional[NamedSharding]
+    value: Any  # jax.Array | ShapeDtypeStruct (abstract mode)
+    epoch: int = 0  # bumped on every Set — drives cache invalidation
+    # re-placement metadata: the declared spec (arrays) / per-field specs
+    # (objects), so Set/Inc restore the same NamedSharding they started with
+    spec: Optional[P] = None
+    field_specs: Optional[Dict[str, P]] = None
+
+
+class HashRing:
+    """Immutable consistent-hash ring over shard ids.
+
+    Each shard contributes ``vnodes`` virtual points; a key is owned by the
+    first point clockwise of ``ring_hash(key)``.  ``added``/``removed``
+    return new rings, never mutate — the store publishes a new ring by
+    swapping one reference.
+    """
+
+    __slots__ = ("ids", "vnodes", "_keys", "_owners")
+
+    def __init__(self, shard_ids, vnodes: int = DEFAULT_VNODES):
+        ids = tuple(sorted(set(int(i) for i in shard_ids)))
+        if not ids:
+            raise ValueError("a hash ring needs at least one shard")
+        if vnodes < 1:
+            raise ValueError(f"vnodes must be >= 1, got {vnodes}")
+        self.ids = ids
+        self.vnodes = int(vnodes)
+        points = sorted((ring_hash(f"shard:{sid}#vnode:{v}"), sid)
+                        for sid in ids for v in range(self.vnodes))
+        self._keys = [h for h, _ in points]
+        self._owners = [sid for _, sid in points]
+
+    def owner(self, key) -> int:
+        """Shard id owning ``key`` (a DSM name, or any hashable address)."""
+        i = bisect.bisect_right(self._keys, ring_hash(key)) % len(self._keys)
+        return self._owners[i]
+
+    def added(self, shard_id: int) -> "HashRing":
+        return HashRing(self.ids + (shard_id,), self.vnodes)
+
+    def removed(self, shard_id: int) -> "HashRing":
+        return HashRing(tuple(i for i in self.ids if i != shard_id), self.vnodes)
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"HashRing(ids={self.ids}, vnodes={self.vnodes})"
+
+
+def _fresh_stats() -> Dict[str, int]:
+    return {"get": 0, "set": 0, "inc": 0, "bytes_get": 0, "bytes_set": 0,
+            "transfers": 0, "migrated_in": 0, "migrated_out": 0}
+
+
+class Shard:
+    """One partition of the namespace: entries + generations + directory,
+    guarded by this shard's own lock (an RLock: the cache layer composes
+    store ops while already holding it)."""
+
+    __slots__ = ("id", "lock", "entries", "gen", "directory", "stats")
+
+    def __init__(self, shard_id: int):
+        self.id = int(shard_id)
+        self.lock = threading.RLock()
+        self.entries: Dict[str, GlobalEntry] = {}
+        # per-name monotonic generation: a name deleted at epoch e re-declares
+        # at e+1, so no cache replica of the deleted era can ever validate as
+        # fresh against the new entry (delete→redeclare stale-read fix)
+        self.gen: Dict[str, int] = {}
+        # shard-local watcher directory: name -> node ids holding a replica
+        self.directory: Dict[str, Set[int]] = {}
+        self.stats = _fresh_stats()
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Shard(id={self.id}, names={len(self.entries)})"
+
+
+@dataclass
+class ShardMigration:
+    """Report of one ring topology change: which keys moved where, and the
+    epoch each moved key carried across (preserved by contract)."""
+
+    added: Tuple[int, ...]
+    removed: Tuple[int, ...]
+    moved: Dict[str, Tuple[int, int]]   # name -> (old shard, new shard)
+    epochs: Dict[str, int]              # preserved epoch of each moved name
+    total_names: int                    # namespace size at migration time
+
+    @property
+    def moved_names(self) -> List[str]:
+        return list(self.moved)
+
+    @property
+    def moved_fraction(self) -> float:
+        return len(self.moved) / self.total_names if self.total_names else 0.0
+
+
+class ShardedStore:
+    """The DSM: a named global address space partitioned over a hash ring.
+
+    ``mesh=None`` gives a single-device store (the paper's single-node
+    degenerate case) used by unit tests and the analytics examples on CPU.
+    ``shards=1`` reproduces the seed's flat ``GlobalStore`` exactly; larger
+    shard counts let operations on different shards proceed concurrently.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None, *, granularity: str = "coarse",
+                 shards: int = 1, vnodes: int = DEFAULT_VNODES):
+        if granularity not in ("coarse", "fine"):
+            raise ValueError(f"granularity must be coarse|fine, got {granularity}")
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self.mesh = mesh
+        self.granularity = granularity
+        self._alloc = AddressAllocator(coarse=(granularity == "coarse"))
+        self._alloc_lock = threading.Lock()
+        # retired shards stay in _shards (empty) so stragglers holding an old
+        # ring snapshot can still lock them, fail the ownership check, retry
+        self._shards: Dict[int, Shard] = {i: Shard(i) for i in range(shards)}
+        self._ring = HashRing(range(shards), vnodes=vnodes)
+        self._rebalance_lock = threading.Lock()
+        self._delete_hooks: List[Callable[[str], None]] = []
+
+    # -- topology -------------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return len(self._ring)
+
+    def shard_ids(self) -> List[int]:
+        return list(self._ring.ids)
+
+    def shard_of(self, name: str) -> int:
+        """Owning shard id of ``name`` under the current ring."""
+        return self._ring.owner(name)
+
+    def shard_for(self, name: str) -> Shard:
+        """Owning :class:`Shard` handle of ``name`` (lock NOT held)."""
+        return self._shards[self._ring.owner(name)]
+
+    @contextmanager
+    def locked_entry(self, name: str):
+        """Yield ``(shard, entry)`` with the owning shard's lock held.
+
+        Lock-free ring snapshot + validate-after-lock: if a rebalance moved
+        the name between the snapshot and the lock, retry against the new
+        ring.  A missing name under a *current* ring is a ``KeyError`` —
+        the same contract the flat dict had.
+        """
+        while True:
+            ring = self._ring
+            shard = self._shards[ring.owner(name)]
+            with shard.lock:
+                entry = shard.entries.get(name)
+                if entry is not None:
+                    yield shard, entry
+                    return
+                if self._ring is ring:
+                    raise KeyError(name)
+            # the ring moved under us — resolve the new owner and retry
+
+    @contextmanager
+    def locked_owner(self, name: str):
+        """Like :meth:`locked_entry` but for declarations: the name need not
+        exist, only the ring snapshot must still be current once locked."""
+        while True:
+            ring = self._ring
+            shard = self._shards[ring.owner(name)]
+            with shard.lock:
+                if self._ring is ring:
+                    yield shard
+                    return
+
+    # -- elastic rebalancing ---------------------------------------------------
+
+    def add_shard(self, shard_id: Optional[int] = None) -> ShardMigration:
+        """Grow the ring by one shard (node join); migrates only the keys
+        whose owner changed, epochs preserved."""
+        with self._rebalance_lock:
+            if shard_id is None:
+                shard_id = max(self._shards) + 1 if self._shards else 0
+            shard_id = int(shard_id)
+            if shard_id in self._ring.ids:
+                raise ValueError(f"shard {shard_id} already on the ring")
+            self._shards.setdefault(shard_id, Shard(shard_id))
+            return self._migrate(self._ring.added(shard_id),
+                                 added=(shard_id,), removed=())
+
+    def remove_shard(self, shard_id: int) -> ShardMigration:
+        """Shrink the ring by one shard (node leave); its keys migrate to the
+        survivors that inherit its arcs, epochs preserved."""
+        with self._rebalance_lock:
+            shard_id = int(shard_id)
+            if shard_id not in self._ring.ids:
+                raise KeyError(f"shard {shard_id} is not on the ring")
+            if len(self._ring) == 1:
+                raise ValueError("cannot remove the last shard")
+            return self._migrate(self._ring.removed(shard_id),
+                                 added=(), removed=(shard_id,))
+
+    def _migrate(self, new_ring: HashRing, *, added, removed) -> ShardMigration:
+        """Move every entry/generation/directory record whose owner changed.
+
+        Caller holds ``_rebalance_lock``.  All involved shard locks are taken
+        in sorted id order; the new ring is published before any lock is
+        released, so concurrent ops either complete under the old topology or
+        observe the new ring when they validate after locking.
+        """
+        old_ring = self._ring
+        ids = sorted(set(old_ring.ids) | set(new_ring.ids))
+        shards = [self._shards[i] for i in ids]
+        for s in shards:
+            s.lock.acquire()
+        try:
+            moved: Dict[str, Tuple[int, int]] = {}
+            epochs: Dict[str, int] = {}
+            total = sum(len(s.entries) for s in shards)
+            for s in shards:
+                for name in list(s.entries):
+                    owner = new_ring.owner(name)
+                    if owner == s.id:
+                        continue
+                    dst = self._shards[owner]
+                    e = s.entries.pop(name)
+                    dst.entries[name] = e          # epoch rides with the entry
+                    moved[name] = (s.id, owner)
+                    epochs[name] = e.epoch
+                    if name in s.gen:
+                        dst.gen[name] = max(dst.gen.get(name, 0), s.gen.pop(name))
+                    if name in s.directory:
+                        dst.directory[name] = s.directory.pop(name)
+                    s.stats["migrated_out"] += 1
+                    dst.stats["migrated_in"] += 1
+                # delete-era generations of names with no live entry follow
+                # the ring too: a redeclare after migration must still start
+                # strictly past the deleted era
+                for name in list(s.gen):
+                    owner = new_ring.owner(name)
+                    if owner != s.id:
+                        dst = self._shards[owner]
+                        dst.gen[name] = max(dst.gen.get(name, 0), s.gen.pop(name))
+                # defensive: orphan directory records (no entry) follow too
+                for name in list(s.directory):
+                    owner = new_ring.owner(name)
+                    if owner != s.id:
+                        self._shards[owner].directory[name] = s.directory.pop(name)
+            self._ring = new_ring   # publish while every lock is still held
+            return ShardMigration(tuple(added), tuple(removed), moved, epochs,
+                                  total)
+        finally:
+            for s in reversed(shards):
+                s.lock.release()
+
+    # -- store-side delete hooks (cache coherence teardown) --------------------
+
+    def add_delete_hook(self, hook: Callable[[str], None], *,
+                        weak: bool = False) -> Callable[[str], None]:
+        """Register ``hook(name)`` to fire inside :meth:`delete`, under the
+        owning shard's lock.  The DSM cache registers its replica/directory
+        teardown here, so a *direct* store delete (not via ``Session.delete``)
+        also kills every phantom holder.
+
+        ``weak=True`` holds a bound-method hook only weakly: a store outlives
+        the sessions rolled over it (FT recovery adopts the surviving store),
+        and a strong ref would pin every dead session's cache — and fan
+        deletes out to it — for the store's lifetime."""
+        self._delete_hooks.append(weakref.WeakMethod(hook) if weak else hook)
+        return hook
+
+    def _fire_delete_hooks(self, name: str) -> None:
+        """Invoke live hooks; prune weak entries whose cache was collected."""
+        dead = []
+        for entry in list(self._delete_hooks):
+            hook = entry() if isinstance(entry, weakref.WeakMethod) else entry
+            if hook is None:
+                dead.append(entry)
+            else:
+                hook(name)
+        for entry in dead:
+            self._delete_hooks.remove(entry)
+
+    # -- declaration ----------------------------------------------------------
+
+    def _sharding(self, spec: Optional[P]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec if spec is not None else P())
+
+    def _num_words(self, shape, dtype) -> int:
+        nbytes = int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype).itemsize if shape else jnp.dtype(dtype).itemsize
+        return max(1, (nbytes + WORD_BYTES - 1) // WORD_BYTES)
+
+    @staticmethod
+    def _fresh_epoch(shard: Shard, name: str) -> int:
+        """Starting epoch for a (re-)declared name: strictly above every epoch
+        the name has ever had, so stale replicas can never validate."""
+        prev = shard.gen.get(name, 0)
+        if name in shard.entries:
+            prev = max(prev, shard.entries[name].epoch + 1)
+        return prev
+
+    def def_global(self, name: str, value, *, spec: Optional[P] = None) -> str:
+        """``DefGlobal(NAME, TYPE)`` — declare a shared variable and set it."""
+        value = jnp.asarray(value)
+        with self._alloc_lock:
+            slot = self._alloc.alloc_field(
+                GLOBALS_OBJECT_ID, self._num_words(value.shape, value.dtype))
+        placed = self._place(value, spec)
+        with self.locked_owner(name) as shard:
+            shard.entries[name] = GlobalEntry(name, slot, self._sharding(spec),
+                                              placed,
+                                              epoch=self._fresh_epoch(shard, name),
+                                              spec=spec)
+        return name
+
+    def new_array(self, name: str, shape, dtype=jnp.float32, *, spec: Optional[P] = None) -> str:
+        """``NewArray<TYPE>(n)`` — allocate a zeroed shared array."""
+        with self._alloc_lock:
+            oid = self._alloc.new_object()
+            slot = self._alloc.alloc_field(oid, self._num_words(shape, dtype))
+        placed = self._place(jnp.zeros(shape, dtype), spec)
+        with self.locked_owner(name) as shard:
+            shard.entries[name] = GlobalEntry(name, slot, self._sharding(spec),
+                                              placed,
+                                              epoch=self._fresh_epoch(shard, name),
+                                              spec=spec)
+        return name
+
+    def new_object(self, name: str, fields: Dict[str, Any], *, specs: Optional[Dict[str, P]] = None) -> str:
+        """``NewObj`` — a shared object: a pytree of fields under one object_id."""
+        specs = specs or {}
+        placed = {}
+        words = 0
+        for fname, fval in fields.items():
+            fval = jnp.asarray(fval)
+            words += self._num_words(fval.shape, fval.dtype)
+            placed[fname] = self._place(fval, specs.get(fname))
+        with self._alloc_lock:
+            oid = self._alloc.new_object()
+            slot = self._alloc.alloc_field(oid, words)
+        with self.locked_owner(name) as shard:
+            shard.entries[name] = GlobalEntry(name, slot, None, placed,
+                                              epoch=self._fresh_epoch(shard, name),
+                                              field_specs=dict(specs))
+        return name
+
+    def delete(self, name: str) -> None:
+        """``DelArray`` / ``DelObj``.  Records the retired epoch so a later
+        re-declaration of the same name starts strictly past it, and fires
+        the registered delete hooks (cache replica + directory teardown)
+        under the owning shard's lock."""
+        with self.locked_entry(name) as (shard, e):
+            del shard.entries[name]
+            shard.gen[name] = max(shard.gen.get(name, 0), e.epoch + 1)
+            shard.directory.pop(name, None)
+            self._fire_delete_hooks(name)
+
+    # -- access (the DSM-internal-layer Get/Set of Table 1) -------------------
+
+    def _place(self, value, spec: Optional[P]):
+        if self.mesh is None:
+            return value
+        return jax.device_put(value, self._sharding(spec))
+
+    def get(self, name: str):
+        with self.locked_entry(name) as (shard, e):
+            shard.stats["get"] += 1
+            shard.stats["bytes_get"] += _nbytes(e.value)
+            shard.stats["transfers"] += self._transfer_count(e.value)
+            return e.value
+
+    def set(self, name: str, value, *, bump_epoch: bool = True) -> None:
+        with self.locked_entry(name) as (shard, e):
+            if isinstance(e.value, dict):
+                specs = e.field_specs or {}
+                e.value = {k: self._place(jnp.asarray(v), specs.get(k))
+                           for k, v in value.items()}
+            else:
+                value = jnp.asarray(value)
+                if e.sharding is not None:
+                    value = jax.device_put(value, e.sharding)
+                e.value = value
+            if bump_epoch:
+                e.epoch += 1
+            shard.stats["set"] += 1
+            shard.stats["bytes_set"] += _nbytes(e.value)
+            shard.stats["transfers"] += self._transfer_count(e.value)
+
+    def mget(self, names) -> list:
+        """``MGet`` — batched get, one logical round trip *per shard touched*
+        (names are grouped by owner, each group read under one lock hold)."""
+        names = list(names)
+        vals: list = [None] * len(names)
+        ring = self._ring
+        groups: Dict[int, List[int]] = {}
+        for i, n in enumerate(names):
+            groups.setdefault(ring.owner(n), []).append(i)
+        for sid, idxs in groups.items():
+            shard = self._shards[sid]
+            stragglers: List[int] = []
+            with shard.lock:
+                got_bytes = 0
+                served = 0
+                for i in idxs:
+                    e = shard.entries.get(names[i])
+                    if e is None:   # migrated (or missing) — retry per name
+                        stragglers.append(i)
+                        continue
+                    vals[i] = e.value
+                    got_bytes += _nbytes(e.value)
+                    served += 1
+                if served:
+                    shard.stats["get"] += 1
+                    shard.stats["transfers"] += 1
+                    shard.stats["bytes_get"] += got_bytes
+            for i in stragglers:
+                vals[i] = self.get(names[i])
+        return vals
+
+    def inc(self, name: str, amount=1):
+        """Atomic increment (Table 1) — skips the cache layer by contract.
+
+        Serialised under the *owning shard's* lock (increments to names on
+        different shards proceed concurrently), re-placed with the entry's
+        declared spec, and accounted like any other DSM write.
+        """
+        with self.locked_entry(name) as (shard, e):
+            e.value = self._place(jnp.asarray(e.value) + amount, e.spec)
+            e.epoch += 1
+            shard.stats["inc"] += 1
+            shard.stats["bytes_set"] += _nbytes(e.value)
+            shard.stats["transfers"] += self._transfer_count(e.value)
+            return e.value
+
+    def epoch(self, name: str) -> int:
+        with self.locked_entry(name) as (_, e):
+            return e.epoch
+
+    def address(self, name: str) -> int:
+        with self.locked_entry(name) as (_, e):
+            return e.slot.address
+
+    def names(self):
+        out: List[str] = []
+        for sid in self._ring.ids:
+            shard = self._shards[sid]
+            with shard.lock:
+                out.extend(shard.entries)
+        return out
+
+    # -- stats / introspection -------------------------------------------------
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Aggregate op counters across every shard (retired shards included,
+        so counters never run backwards across a rebalance)."""
+        total = _fresh_stats()
+        for shard in self._shards.values():
+            for key, v in shard.stats.items():
+                total[key] += v
+        return total
+
+    def shard_stats(self) -> Dict[int, Dict[str, Any]]:
+        """Per-shard op counters + entry count, keyed by shard id (active
+        ring members only)."""
+        out: Dict[int, Dict[str, Any]] = {}
+        for sid in self._ring.ids:
+            shard = self._shards[sid]
+            with shard.lock:
+                row = dict(shard.stats)
+                row["names"] = len(shard.entries)
+            out[sid] = row
+        return out
+
+    @property
+    def _entries(self) -> Dict[str, GlobalEntry]:
+        """Merged name→entry view across shards (read-only compatibility with
+        the flat store; mutate through the store API, not this view)."""
+        merged: Dict[str, GlobalEntry] = {}
+        for shard in self._shards.values():
+            merged.update(shard.entries)
+        return merged
+
+    def _transfer_count(self, value) -> int:
+        """How many physical transfers a get/set of `value` costs under the
+        current granularity — the quantity Fig. 3 is about."""
+        leaves = jax.tree.leaves(value)
+        if self.granularity == "coarse":
+            return len(leaves)  # one package-aligned bulk transfer per leaf
+        # fine-grained: one word-sized KV op per word
+        return int(sum(max(1, _nbytes(l) // WORD_BYTES) for l in leaves))

@@ -24,6 +24,7 @@ This module is the *dispatching layer* shared by both backends:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -190,3 +191,20 @@ def sparse_beneficial(x: jax.Array, k: int, block: int = DEFAULT_BLOCK) -> jax.A
     per_block_nnz = jnp.sum((xp != 0).astype(jnp.int32), axis=1)
     cheaper = 2 * pair_capacity(n, k, block) < n
     return jnp.logical_and(jnp.all(per_block_nnz <= per_block), cheaper)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _all_beneficial(mat: jax.Array, k: int, block: int) -> jax.Array:
+    return jnp.all(jax.vmap(lambda f: sparse_beneficial(f, k, block))(mat))
+
+
+def sparse_beneficial_batch(vectors, k: int, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """The auto rule for a whole accumulator round in ONE jitted call: True
+    iff *every* contribution is losslessly compressible AND cheaper.
+
+    The host accumulator's round closes on the driver; evaluating the rule
+    per contribution costs O(N) small device syncs per round.  Stacking the
+    (same-shape, by the ragged-round contract) contributions and deciding
+    under one jit collapses that to a single scalar sync."""
+    mat = jnp.stack([jnp.asarray(v).reshape(-1) for v in vectors])
+    return _all_beneficial(mat, int(k), int(block))

@@ -7,13 +7,14 @@ from repro.ft.checkpoint import (
     save_checkpoint,
 )
 from repro.ft.elastic import (RecoveryPlan, elastic_restore, plan_recovery,
-                              rebalance_batch, reshard_tree, session_recovery)
+                              rebalance_batch, rebalance_shards, reshard_tree,
+                              session_recovery)
 from repro.ft.heartbeat import HeartbeatMonitor
 
 __all__ = [
     "AsyncCheckpointer", "Checkpoint", "latest_step", "list_checkpoints",
     "restore_checkpoint", "save_checkpoint",
     "RecoveryPlan", "elastic_restore", "plan_recovery", "rebalance_batch",
-    "reshard_tree", "session_recovery",
+    "rebalance_shards", "reshard_tree", "session_recovery",
     "HeartbeatMonitor",
 ]

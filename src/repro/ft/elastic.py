@@ -32,6 +32,47 @@ class RecoveryPlan:
     mode: str                      # "single" | "multi"
     reassignment: Dict[int, int]   # failed worker tid -> survivor node id
     new_world: List[int]           # surviving node ids
+    migration: Optional[Any] = None  # ShardMigration when the DSM rebalanced
+
+
+def rebalance_shards(store, *, join: Sequence[int] = (), leave: Sequence[int] = ()):
+    """Elastic ring rebalance on node join/leave (the sharded-store half of
+    §5.4 recovery).
+
+    Joining nodes get a shard arc on the consistent-hash ring; leaving nodes'
+    shards hand their arcs to the survivors.  Only the ~1/S of keys whose arc
+    changed owner migrate — each with its epoch, delete-era generation and
+    watcher-directory record intact, so no cache replica goes stale and no
+    deleted-era name can resurface after the move.  Returns the merged
+    :class:`~repro.core.shards.ShardMigration` (or ``None`` if the topology
+    did not change — e.g. a dead node that never had a shard, or the last
+    shard, which can't be removed).
+    """
+    from repro.core.shards import ShardMigration
+
+    merged: Optional[ShardMigration] = None
+    for sid in join:
+        if sid in store.shard_ids():
+            continue
+        merged = _merge_migrations(merged, store.add_shard(sid))
+    for sid in leave:
+        if sid not in store.shard_ids() or store.n_shards == 1:
+            continue
+        merged = _merge_migrations(merged, store.remove_shard(sid))
+    return merged
+
+
+def _merge_migrations(a, b):
+    if a is None:
+        return b
+    # a key moved twice reports its original source and final destination
+    moved = dict(a.moved)
+    epochs = dict(a.epochs)
+    for name, (src, dst) in b.moved.items():
+        moved[name] = (moved[name][0] if name in moved else src, dst)
+        epochs[name] = b.epochs[name]
+    return type(b)(a.added + b.added, a.removed + b.removed, moved, epochs,
+                   b.total_names)
 
 
 def plan_recovery(failed_nodes: Sequence[int], all_nodes: Sequence[int],
@@ -54,7 +95,8 @@ def plan_recovery(failed_nodes: Sequence[int], all_nodes: Sequence[int],
 
 
 def session_recovery(session, failed_nodes: Sequence[int], mode: str = "multi",
-                     threads_per_node: Optional[int] = None):
+                     threads_per_node: Optional[int] = None,
+                     rebalance: bool | str = "auto"):
     """STEP §5.4 on the Session facade: plan the reassignment of a failed
     node's threads and build a replacement host Session over the survivors.
 
@@ -63,6 +105,15 @@ def session_recovery(session, failed_nodes: Sequence[int], mode: str = "multi",
     survives the node loss, only the thread placement changes.  ``single``
     routes all lost threads to one survivor; ``multi`` round-robins them
     (the faster option, Fig. 11).
+
+    ``rebalance`` controls the ring: ``"auto"`` (default) removes each failed
+    node's shard from the consistent-hash ring only when the session follows
+    the shards-per-node convention (``store.n_shards == n_nodes``, so shard
+    ids ARE node ids) — only its ~1/S of keys migrate to survivors (epochs
+    preserved), recorded in ``plan.migration``.  Any other shard count keeps
+    the ring untouched (node ids and shard ids are unrelated there; a
+    coincidental id match must not evict a healthy shard).  ``True`` forces
+    the removal, ``False`` disables it.
     """
     from repro.core.session import HostBackend, Session
 
@@ -75,6 +126,9 @@ def session_recovery(session, failed_nodes: Sequence[int], mode: str = "multi",
                     for n in range(pool.n_nodes)}
     plan = plan_recovery(failed_nodes, list(range(pool.n_nodes)),
                          tids_by_node, mode=mode)
+    shards_follow_nodes = session.store.n_shards == pool.n_nodes
+    if rebalance is True or (rebalance == "auto" and shards_follow_nodes):
+        plan.migration = rebalance_shards(session.store, leave=failed_nodes)
     tpn = threads_per_node or pool.threads_per_node
     new_session = Session(backend=HostBackend(len(plan.new_world), tpn),
                           store=session.store, accum_mode=session.accum_mode)

@@ -1,0 +1,150 @@
+"""AccumMode.AUTO traffic accounting — both ROADMAP open items.
+
+SPMD: the ``lax.cond`` branch is a runtime decision invisible at trace time;
+each auto call site now threads a device-side branch counter through the
+program (and through the ``lax.scan`` carry under ``ctx.iterate``), and
+``join`` settles the trace-time dense upper bound to the branch actually
+taken — so ``wire_traffic()`` matches the host figure exactly.
+
+Host: the round's per-contribution ``sparse_beneficial`` checks are batched
+into ONE jitted call (one device sync per round instead of O(N)).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess_devices
+from repro.core import AccumMode, Session, accumulate
+from repro.core.sparse import pair_capacity
+
+
+def _run(backend, rows, mode="auto", iters=None):
+    V = rows.shape[1]
+    sess = Session(backend=backend, n_nodes=1, threads_per_node=1)
+    out = sess.new_array("o", (V,), sparse_k=8)
+    if iters is None:
+        def proc(ctx, xs):
+            return out.accumulate(xs[0], mode=mode)
+    else:
+        def proc(ctx, xs):
+            def step(c):
+                return c + out.accumulate(xs[0], mode=mode)
+            return ctx.iterate(step, jnp.zeros((V,)), iters)
+    res = sess.run(proc, data=(rows,))
+    return np.asarray(res[0]), sess.wire_traffic()
+
+
+def test_auto_wire_parity_single_device():
+    """1 host thread vs a 1-device SPMD mesh: AUTO's settled wire figure
+    equals the host's actual-branch figure on both the sparse and the dense
+    side of the crossover."""
+    V, k = 512, 8
+    sparse_rows = np.zeros((1, V), np.float32)
+    sparse_rows[0, 3:6] = 2.0
+    sparse_rows = jnp.asarray(sparse_rows)
+    r_h, w_h = _run("host", sparse_rows)
+    r_s, w_s = _run("spmd", sparse_rows)
+    np.testing.assert_allclose(r_h, r_s, rtol=1e-6)
+    assert w_h == w_s == 2 * pair_capacity(V, k) + V     # pairs branch
+
+    rng = np.random.default_rng(0)
+    dense_rows = jnp.asarray(rng.normal(size=(1, V)).astype(np.float32))
+    _, w_h = _run("host", dense_rows)
+    _, w_s = _run("spmd", dense_rows)
+    assert w_h == w_s == 2 * V                           # dense (N+1)·V, N=1
+
+
+def test_auto_wire_parity_multidevice_and_iterate():
+    out = run_subprocess_devices("""
+import jax.numpy as jnp, numpy as np
+from repro.core import Session
+from repro.core.sparse import pair_capacity
+
+V, k, N = 512, 8, 4
+P = pair_capacity(V, k)
+
+def run(backend, rows, iters=None):
+    sess = Session(backend=backend, n_nodes=2, threads_per_node=2)
+    out = sess.new_array("o", (V,), sparse_k=k)
+    if iters is None:
+        def proc(ctx, xs):
+            return out.accumulate(xs[0], mode="auto")
+    else:
+        def proc(ctx, xs):
+            def step(c):
+                return c + out.accumulate(xs[0], mode="auto")
+            return ctx.iterate(step, jnp.zeros((V,)), iters)
+    res = sess.run(proc, data=(rows,))
+    return np.asarray(res[0]), sess.wire_traffic()
+
+rows = np.zeros((N, V), np.float32)
+for t in range(N):
+    rows[t, t * 3: t * 3 + 3] = float(t + 1)
+rows = jnp.asarray(rows)
+
+# sparse side of the crossover: settled SPMD figure == host pairs figure
+r_h, w_h = run("host", rows)
+r_s, w_s = run("spmd", rows)
+np.testing.assert_allclose(r_h, r_s, rtol=1e-6)
+assert w_h == w_s == N * 2 * P + V, (w_h, w_s)
+
+# dense side: both fall back to (N+1)·V
+rng = np.random.default_rng(1)
+dense = jnp.asarray(rng.normal(size=(N, V)).astype(np.float32))
+r_h, w_h = run("host", dense)
+r_s, w_s = run("spmd", dense)
+np.testing.assert_allclose(r_h, r_s, rtol=1e-5)
+assert w_h == w_s == (N + 1) * V, (w_h, w_s)
+
+# under ctx.iterate the counter rides the scan carry: 3 sparse rounds
+r_h, w_h = run("host", rows, iters=3)
+r_s, w_s = run("spmd", rows, iters=3)
+np.testing.assert_allclose(r_h, r_s, rtol=1e-6)
+assert w_h == w_s == 3 * (N * 2 * P + V), (w_h, w_s)
+print("AUTO_TRAFFIC_OK")
+""", n_devices=4)
+    assert "AUTO_TRAFFIC_OK" in out
+
+
+def test_host_auto_decides_each_round_with_one_batched_call(monkeypatch):
+    """Satellite: the host accumulator's AUTO rule is one jitted
+    sparse_beneficial_batch call per round, not O(N) per-contribution
+    device syncs."""
+    import repro.core.accumulator as accu_mod
+
+    calls = []
+    real = accu_mod.sparse_beneficial_batch
+
+    def counting(vectors, k, block):
+        calls.append(len(list(vectors)))
+        return real(vectors, k, block)
+
+    monkeypatch.setattr(accu_mod, "sparse_beneficial_batch", counting)
+    # the per-contribution path must not be hit at all from the host round
+    monkeypatch.setattr(
+        accu_mod, "sparse_beneficial",
+        lambda *a, **kw: pytest.fail("per-contribution sparse_beneficial "
+                                     "called from the host AUTO round"))
+
+    sess = Session(backend="host", n_nodes=2, threads_per_node=2)
+    out = sess.new_array("g", (256,), sparse_k=8)
+    rounds = 3
+
+    def proc(ctx):
+        def step(_):
+            out.accumulate(jnp.ones(256), mode="auto")
+            return _
+        ctx.iterate(step, None, rounds)
+
+    sess.run(proc)
+    assert calls == [4] * rounds    # one batched decision per round, N=4 vecs
+
+
+def test_with_branch_rejected_outside_auto():
+    # the mode check fires before any collective, so no mesh context needed
+    with pytest.raises(ValueError, match="with_branch"):
+        accumulate(jnp.ones(4), "data", AccumMode.SPARSE, k=2, with_branch=True)
+    with pytest.raises(ValueError, match="with_branch"):
+        accumulate(jnp.ones(4), "data", AccumMode.REDUCE_SCATTER,
+                   with_branch=True)

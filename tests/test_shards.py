@@ -1,0 +1,433 @@
+"""step.shards — consistent-hash sharded store: ring, per-shard locking,
+shard-local directories, elastic rebalancing, and S-sweep app parity.
+
+The tentpole contract: ``ShardedStore(shards=1)`` is behaviour-identical to
+the seed's flat ``GlobalStore``; with S>1, operations on names owned by
+different shards never contend on a shared lock; a ring join/leave migrates
+only the keys whose owner changed, with epochs (and delete-era generations)
+preserved so no stale cache replica survives a migration; and the four
+analytics apps agree host↔SPMD at S ∈ {1, 2, 8}.
+"""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DSMCache, GlobalStore, HashRing, Session, ShardedStore
+from repro.ft import rebalance_shards, session_recovery
+
+
+def _names_per_shard(store, per_shard: int = 1, prefix: str = "k"):
+    """Find (and declare) `per_shard` names on each active shard."""
+    got = {sid: [] for sid in store.shard_ids()}
+    i = 0
+    while any(len(v) < per_shard for v in got.values()):
+        name = f"{prefix}{i}"
+        i += 1
+        sid = store.shard_of(name)
+        if len(got[sid]) < per_shard:
+            store.def_global(name, jnp.zeros(4))
+            got[sid].append(name)
+    return got
+
+
+# -- the ring -----------------------------------------------------------------
+
+
+def test_ring_deterministic_and_total():
+    r1 = HashRing([0, 1, 2, 3])
+    r2 = HashRing([0, 1, 2, 3])
+    keys = [f"name{i}" for i in range(200)]
+    assert [r1.owner(k) for k in keys] == [r2.owner(k) for k in keys]
+    assert set(r1.owner(k) for k in keys) <= {0, 1, 2, 3}
+    # every shard owns a non-trivial arc
+    from collections import Counter
+    counts = Counter(r1.owner(k) for k in keys)
+    assert len(counts) == 4 and min(counts.values()) >= 10
+
+
+def test_ring_change_moves_only_affected_arcs():
+    old = HashRing(range(4))
+    grown = old.added(4)
+    keys = [f"name{i}" for i in range(500)]
+    moved = [k for k in keys if old.owner(k) != grown.owner(k)]
+    # only keys that the NEW shard claimed may change owner
+    assert all(grown.owner(k) == 4 for k in moved)
+    assert 0 < len(moved) < len(keys) // 2          # ~1/5 expected
+    shrunk = old.removed(2)
+    moved = [k for k in keys if old.owner(k) != shrunk.owner(k)]
+    assert all(old.owner(k) == 2 for k in moved)    # only the dead shard's keys
+
+
+def test_ring_validation():
+    with pytest.raises(ValueError):
+        HashRing([])
+    with pytest.raises(ValueError):
+        HashRing([0], vnodes=0)
+    store = GlobalStore(shards=2)
+    with pytest.raises(ValueError):
+        store.add_shard(1)          # already on the ring
+    with pytest.raises(KeyError):
+        store.remove_shard(9)
+    store.remove_shard(1)
+    with pytest.raises(ValueError):
+        store.remove_shard(0)       # never remove the last shard
+
+
+# -- S=1 flat-store equivalence ----------------------------------------------
+
+
+def test_single_shard_matches_flat_store_semantics():
+    s = GlobalStore(shards=1)
+    assert s.n_shards == 1 and s.shard_ids() == [0]
+    s.def_global("x", jnp.arange(4.0))
+    s.new_array("a", (8,), jnp.int32)
+    s.new_object("o", {"w": jnp.ones((2, 2)), "b": jnp.zeros(2)})
+    assert s.shard_of("x") == 0
+    np.testing.assert_allclose(s.get("x"), [0, 1, 2, 3])
+    s.set("x", jnp.ones(4))
+    assert s.epoch("x") == 1
+    va, vo = s.mget(["x", "o"])
+    np.testing.assert_allclose(va, 1.0)
+    assert set(vo) == {"w", "b"}
+    assert int(s.inc("x", 5)[0]) == 6
+    # delete→redeclare starts strictly past the deleted era (generation fix)
+    s.delete("x")
+    s.def_global("x", jnp.zeros(4))
+    assert s.epoch("x") > 1
+    assert sorted(s.names()) == ["a", "o", "x"]
+    assert s.stats["set"] >= 1 and s.stats["inc"] == 1
+
+
+def test_mget_one_round_trip_per_shard_touched():
+    s = GlobalStore(shards=4)
+    per = _names_per_shard(s, per_shard=2)
+    names = [n for group in per.values() for n in group]
+    base = s.stats["get"]
+    base_tr = s.stats["transfers"]
+    s.mget(names)
+    shards_touched = len({s.shard_of(n) for n in names})
+    assert shards_touched == 4
+    assert s.stats["get"] - base == shards_touched
+    assert s.stats["transfers"] - base_tr == shards_touched
+
+
+# -- per-shard locking: the concurrency acceptance criterion -------------------
+
+
+def test_ops_on_other_shards_run_while_one_shard_lock_is_held():
+    """Hold shard A's lock; reads/writes/incs on shard-B names (through the
+    cache, exactly the worker path) must complete — pre-shards, the single
+    Session._cache_lock serialised them behind the holder."""
+    store = GlobalStore(shards=8)
+    cache = DSMCache(store, n_nodes=4)
+    per = _names_per_shard(store)
+    (sid_a, (name_a,)), (sid_b, (name_b,)) = [
+        (sid, tuple(v)) for sid, v in list(per.items())[:2]]
+    assert sid_a != sid_b
+
+    other_done = threading.Event()
+    blocked_done = threading.Event()
+
+    def touch_other_shard():
+        cache.write(0, name_b, jnp.ones(4))
+        cache.read(1, name_b)
+        store.inc(name_b, 1.0)
+        other_done.set()
+
+    def touch_held_shard():
+        store.get(name_a)
+        blocked_done.set()
+
+    lock_a = store.shard_for(name_a).lock
+    lock_a.acquire()
+    try:
+        t1 = threading.Thread(target=touch_other_shard, daemon=True)
+        t1.start()
+        assert other_done.wait(10.0), \
+            "ops on a different shard blocked behind a held shard lock"
+        t2 = threading.Thread(target=touch_held_shard, daemon=True)
+        t2.start()
+        time.sleep(0.2)
+        assert not blocked_done.is_set(), \
+            "an op on the held shard must wait for its lock"
+    finally:
+        lock_a.release()
+    assert blocked_done.wait(10.0)
+    t1.join(5)
+    t2.join(5)
+
+
+def test_concurrent_cached_rw_mix_across_shards_is_coherent():
+    """Stress: 4 worker nodes hammer a read/write/inc mix over names spread
+    across 8 shards; every read must observe a value some writer published
+    (epoch coherence holds with per-shard locks, no global serialisation)."""
+    sess = Session(backend="host", n_nodes=4, threads_per_node=1, shards=8)
+    refs = [sess.new_array(f"v{i}", (4,)) for i in range(16)]
+    counter = sess.def_global("hits", 0.0)
+
+    def proc(ctx):
+        for round_ in range(30):
+            r = refs[(ctx.tid * 7 + round_) % len(refs)]
+            if round_ % 3 == ctx.tid % 3:
+                r.set(jnp.full((4,), float(round_)))
+            v = np.asarray(r.get())
+            assert v.shape == (4,) and np.all(v == v[0])  # never torn
+            counter.inc(1.0)
+        return True
+
+    assert sess.run(proc) == [True] * 4
+    assert float(counter.get()) == 4 * 30
+    stats = sess.shard_stats()
+    assert set(stats) == set(sess.store.shard_ids())
+    # the namespace genuinely spread: several shards saw traffic
+    busy = [sid for sid, row in stats.items() if row["store"]["get"] > 0]
+    assert len(busy) >= 2
+
+
+# -- elastic rebalancing -------------------------------------------------------
+
+
+def test_rebalance_moves_only_changed_owners_epochs_survive():
+    store = GlobalStore(shards=4)
+    names = [f"n{i}" for i in range(120)]
+    for i, n in enumerate(names):
+        store.def_global(n, float(i))
+        store.set(n, float(i) + 1.0)        # every epoch distinct from fresh
+    owners = {n: store.shard_of(n) for n in names}
+    epochs = {n: store.epoch(n) for n in names}
+
+    mig = store.add_shard()                  # join: shard 4
+    assert mig.added == (4,) and not mig.removed
+    for n, (src, dst) in mig.moved.items():
+        assert owners[n] == src and dst == 4
+    for n in names:
+        if n not in mig.moved:               # unmoved keys keep their owner
+            assert store.shard_of(n) == owners[n]
+        assert store.epoch(n) == epochs[n] == mig.epochs.get(n, epochs[n])
+        np.testing.assert_allclose(np.asarray(store.get(n)),
+                                   float(names.index(n)) + 1.0)
+    assert 0 < mig.moved_fraction < 0.5      # ~1/5 of the namespace
+
+    owners2 = {n: store.shard_of(n) for n in names}
+    mig2 = store.remove_shard(1)             # leave: shard 1 hands off its arc
+    assert set(mig2.moved) == {n for n in names if owners2[n] == 1}
+    for n in names:
+        assert store.epoch(n) == epochs[n]
+    assert store.shard_ids() == [0, 2, 3, 4]
+
+
+def test_rebalance_preserves_delete_generations():
+    """A name deleted before the migration must still redeclare strictly past
+    its retired epoch on its NEW owner shard."""
+    store = GlobalStore(shards=2)
+    store.def_global("victim", jnp.ones(4))
+    store.set("victim", jnp.zeros(4))
+    retired_epoch = store.epoch("victim")
+    store.delete("victim")
+    # force the arc to move: grow the ring until the owner changes
+    old_owner = store.shard_of("victim")
+    while store.shard_of("victim") == old_owner:
+        store.add_shard()
+    store.def_global("victim", jnp.full((4,), 9.0))
+    assert store.epoch("victim") > retired_epoch
+
+
+def test_no_stale_replica_survives_migration():
+    """Cache replicas validated by epoch stay exact across a migration, and
+    the migrated directory record still drives invalidation on the new
+    owner shard."""
+    store = GlobalStore(shards=2)
+    cache = DSMCache(store, n_nodes=2)
+    store.def_global("m", jnp.full((4,), 1.0))
+    np.testing.assert_allclose(cache.read(0, "m"), 1.0)   # node 0 replica
+    old_owner = store.shard_of("m")
+    while store.shard_of("m") == old_owner:
+        store.add_shard()
+    # directory record migrated with the entry: a write by node 1 must still
+    # invalidate node 0's replica
+    cache.write(1, "m", jnp.full((4,), 2.0))
+    assert cache.stats.invalidations == 1
+    np.testing.assert_allclose(cache.read(0, "m"), 2.0)   # fresh, not stale
+    # and the epoch-validated fast path still hits after refresh
+    hits = cache.stats.hits
+    np.testing.assert_allclose(cache.read(0, "m"), 2.0)
+    assert cache.stats.hits == hits + 1
+
+
+def test_store_side_delete_hook_kills_phantom_holders():
+    """Satellite: GlobalStore.delete called DIRECTLY (not via Session.delete)
+    must tear down cache replicas and directory holders — pre-hook, phantom
+    holders persisted until eviction."""
+    store = GlobalStore(shards=2)
+    cache = DSMCache(store, n_nodes=3)
+    store.def_global("p", jnp.full((4,), 5.0))
+    for node in range(3):
+        cache.read(node, "p")
+    assert any("p" in d for d in cache.directory)
+    store.delete("p")                         # direct store-level delete
+    assert all("p" not in c.blocks for c in cache.caches)
+    assert all("p" not in d for d in cache.directory)
+    store.def_global("p", jnp.full((4,), 7.0))
+    misses = cache.stats.misses
+    np.testing.assert_allclose(cache.read(0, "p"), 7.0)   # miss, not phantom
+    assert cache.stats.misses == misses + 1
+
+
+def test_session_recovery_rebalances_ring_under_drill_scenario():
+    """The fault_tolerance_drill scenario on a sharded store: node 2 dies,
+    session_recovery removes its shard — only its keys migrate (epochs
+    preserved) and the recovered session keeps computing correctly."""
+    from repro.analytics import kmeans
+    from repro.data import kmeans_dataset
+
+    x, _, _ = kmeans_dataset(400, 8, 4, seed=0)
+    sess = Session(backend="host", n_nodes=4, threads_per_node=2, shards=4)
+    kmeans.fit(x, 4, iters=2, seed=0, session=sess)
+    names = sess.names()
+    owners = {n: sess.store.shard_of(n) for n in names}
+    epochs = {n: sess.store.epoch(n) for n in names}
+
+    sess.kill_node(2)
+    plan, recovered = session_recovery(sess, [2], mode="multi")
+    assert plan.migration is not None and plan.migration.removed == (2,)
+    assert set(plan.migration.moved) == {n for n in names if owners[n] == 2}
+    assert recovered.store is sess.store
+    assert recovered.store.shard_ids() == [0, 1, 3]
+    for n in names:
+        assert recovered.store.epoch(n) == epochs[n]
+        if owners[n] != 2:
+            assert recovered.store.shard_of(n) == owners[n]
+    centers, _ = kmeans.fit(x, 4, iters=2, seed=0, session=recovered)
+    ref = kmeans.fit_reference(x, 4, iters=2, seed=0)
+
+    # compare the clustering objective, not raw coordinates: host accumulator
+    # rounds sum in thread-arrival order, and a boundary point flipping
+    # cluster under fp non-associativity may shift a center slightly
+    def inertia(c):
+        d = np.linalg.norm(np.asarray(x)[:, None, :] - np.asarray(c)[None],
+                           axis=-1)
+        return float(np.mean(np.min(d, axis=1) ** 2))
+
+    assert abs(inertia(centers) - inertia(ref)) <= 0.05 * inertia(ref)
+
+
+def test_session_recovery_keeps_ring_when_shards_dont_follow_nodes():
+    """A failed NODE id must not evict a coincidentally-matching SHARD id:
+    with shards != n_nodes the ids are unrelated and the ring stays put."""
+    sess = Session(backend="host", n_nodes=4, threads_per_node=1, shards=8)
+    plan, _ = session_recovery(sess, [2], mode="multi")
+    assert plan.migration is None
+    assert sess.store.shard_ids() == list(range(8))
+    # explicit opt-in still forces the removal
+    plan, _ = session_recovery(sess, [2], mode="multi", rebalance=True)
+    assert plan.migration is not None and plan.migration.removed == (2,)
+    assert sess.store.shard_ids() == [0, 1, 3, 4, 5, 6, 7]
+
+
+def test_delete_hooks_do_not_pin_dead_session_caches():
+    """FT recovery rolls new sessions over a surviving store; each session's
+    cache registers a delete hook.  The hooks must be weak: a collected
+    session's cache drops off the hook list instead of leaking forever."""
+    import gc
+
+    store = GlobalStore(shards=2)
+    store.def_global("h", jnp.ones(4))
+    for _ in range(5):
+        sess = Session(backend="host", n_nodes=2, threads_per_node=1,
+                       store=store)
+        sess.run(lambda ctx: float(np.asarray(sess.ref("h").get())[0]))
+        del sess
+    gc.collect()
+    store.delete("h")     # fires hooks: dead ones must have been pruned
+    assert len(store._delete_hooks) <= 1   # at most the GC-pending newest
+
+
+def test_rebalance_shards_merges_join_and_leave():
+    store = GlobalStore(shards=2)
+    for i in range(40):
+        store.def_global(f"j{i}", float(i))
+    mig = rebalance_shards(store, join=[2, 3], leave=[0])
+    assert mig.added == (2, 3) and mig.removed == (0,)
+    assert store.shard_ids() == [1, 2, 3]
+    assert all(store.shard_of(n) != 0 for n in store.names())
+    # no-op topology changes report None
+    assert rebalance_shards(store, join=[2], leave=[9]) is None
+
+
+# -- app parity across shard counts (the acceptance criterion) -----------------
+
+
+@pytest.mark.parametrize("shards", [1, 2, 8])
+def test_apps_host_spmd_parity_across_shard_counts(shards):
+    """All four analytics apps: host and SPMD sessions over an S-shard store
+    produce the flat-store reference results — sharding is invisible to the
+    programming model at every S."""
+    from repro.analytics import kmeans, logreg, nmf, pagerank
+    from repro.data import kmeans_dataset, logreg_dataset, nmf_dataset, powerlaw_graph
+
+    def sessions():
+        return (Session(backend="host", n_nodes=2, threads_per_node=2,
+                        shards=shards),
+                Session(backend="spmd", shards=shards))
+
+    x, y, _ = logreg_dataset(200, 16, seed=0)
+    ref = logreg.fit(x, y, iters=4,
+                     session=Session(backend="host", n_nodes=2,
+                                     threads_per_node=2))[0]
+    h, s = sessions()
+    np.testing.assert_allclose(logreg.fit(x, y, iters=4, session=h)[0], ref,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(logreg.fit(x, y, iters=4, session=s)[0], ref,
+                               rtol=1e-4, atol=1e-5)
+
+    xk, _, _ = kmeans_dataset(240, 8, 4, seed=1)
+    refc = kmeans.fit(xk, 4, iters=3, seed=1,
+                      session=Session(backend="host", n_nodes=2,
+                                      threads_per_node=2))[0]
+    h, s = sessions()
+    np.testing.assert_allclose(kmeans.fit(xk, 4, iters=3, seed=1,
+                                          session=h)[0], refc,
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(kmeans.fit(xk, 4, iters=3, seed=1,
+                                          session=s)[0], refc,
+                               rtol=1e-3, atol=1e-3)
+
+    r, _, _ = nmf_dataset(60, 16, 3, seed=2)
+    h, s = sessions()
+    p_h, q_h, _ = nmf.fit(r, 3, iters=4, seed=2, session=h)
+    p_s, q_s, _ = nmf.fit(r, 3, iters=4, seed=2, session=s)
+    np.testing.assert_allclose(nmf.frob_loss(r, p_s, q_s),
+                               nmf.frob_loss(r, p_h, q_h), rtol=1e-2)
+
+    edges = powerlaw_graph(120, 4, seed=3)
+    refr = pagerank.fit(edges, 120, iters=4,
+                        session=Session(backend="host", n_nodes=2,
+                                        threads_per_node=2))[0]
+    h, s = sessions()
+    np.testing.assert_allclose(pagerank.fit(edges, 120, iters=4,
+                                            session=h)[0], refr,
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(pagerank.fit(edges, 120, iters=4,
+                                            session=s)[0], refr,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_shard_stats_attributes_wire_traffic_to_output_shard():
+    sess = Session(backend="host", n_nodes=2, threads_per_node=2, shards=4)
+    out = sess.new_array("out", (16,))
+
+    def proc(ctx):
+        return float(out.accumulate(jnp.ones(16))[0])
+
+    assert sess.run(proc) == [4.0] * 4
+    stats = sess.shard_stats()
+    sid = out.shard
+    assert stats[sid]["wire_traffic"] == (4 + 1) * 16 == sess.wire_traffic()
+    assert sum(row["wire_traffic"] for row in stats.values()) == sess.wire_traffic()
+    # store per-shard counters roll up to the aggregate
+    assert (sum(row["store"]["set"] for row in stats.values())
+            == sess.store.stats["set"])
