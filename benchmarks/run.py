@@ -22,6 +22,7 @@ BENCHES = [
     ("fault_tolerance", "benchmarks.bench_fault_tolerance"),  # Fig. 11
     ("kernels", "benchmarks.bench_kernels"),                # Pallas μs/call
     ("compile", "benchmarks.bench_compile"),                # ctx.iterate O(1) claim
+    ("trace", "benchmarks.bench_trace"),                    # step.trace overhead
 ]
 
 

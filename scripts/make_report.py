@@ -56,11 +56,69 @@ def improvement_note(r):
     return "compute-bound: raise MXU utilisation (bigger per-device tiles, skip causal-masked blocks, fewer remat recomputes)"
 
 
+def trace_section(bench_path):
+    """§Observability: the step.trace overhead table from BENCH_trace.json."""
+    r = json.load(open(bench_path))
+    print("\n### step.trace overhead (benchmarks/BENCH_trace.json)\n")
+    print("| workload | tracer | seconds | ops/s | events |")
+    print("|---|---|---|---|---|")
+    for wl, key in (("rw mix (S=8, 8 threads)", "rw"), ("logreg fit", "logreg")):
+        for state in ("noop", "disabled", "enabled"):
+            row = r.get(f"{key}_{state}")
+            if row is None:
+                continue
+            ops = f"{row['ops_per_sec']:.0f}" if "ops_per_sec" in row else "—"
+            print(f"| {wl} | {state} | {row['seconds']:.4f} | {ops} | "
+                  f"{row['events']} |")
+    pct = r.get("disabled_overhead_pct_rw")
+    if pct is not None:
+        ok = "within" if r.get("disabled_within_limit") else "OVER"
+        print(f"\nDisabled-tracer overhead on the rw mix: **{pct:.2f}%** "
+              f"({ok} the {r.get('acceptance_limit_pct', 5.0):.0f}% budget); "
+              f"enabled recording costs "
+              f"{r.get('enabled_overhead_pct_rw', 0.0):.1f}%.")
+
+
+def export_sample_trace(path):
+    """Run a small 2-thread logreg fit with tracing armed and export the
+    Chrome-trace JSON — the artifact to drag into https://ui.perfetto.dev."""
+    import numpy as np
+
+    from repro.analytics import logreg
+    from repro.core import Session
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(128, 32)).astype(np.float32)
+    y = (rng.random(128) > 0.5).astype(np.float32)
+    sess = Session(backend="host", n_nodes=2, threads_per_node=1, trace=True)
+    try:
+        logreg.fit(x, y, iters=5, session=sess)
+        sess.tracer.export(path)
+        snap = sess.tracer.snapshot()
+        print(f"wrote {path}: {snap['events']} events, "
+              f"categories {sorted(snap['spans_by_category'])}")
+    finally:
+        sess.tracer.disable()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--trace-bench", default="benchmarks/BENCH_trace.json",
+                    help="step.trace overhead JSON (section skipped if absent)")
+    ap.add_argument("--export-trace", default=None, metavar="PATH",
+                    help="run a traced 2-thread logreg fit and write the "
+                         "Perfetto-loadable trace JSON to PATH, then exit")
     args = ap.parse_args()
+    if args.export_trace:
+        export_sample_trace(args.export_trace)
+        return
+    if not os.path.isdir(args.out):
+        print(f"# no dry-run records at {args.out}; skipping dryrun/roofline")
+        if os.path.exists(args.trace_bench):
+            trace_section(args.trace_bench)
+        return
     recs, skips = load(args.out)
 
     print("### Dry-run matrix (lower+compile status, bytes/device)\n")
@@ -95,6 +153,9 @@ def main():
                       f"{fmt_bytes(r['peak_bytes'])} | {improvement_note(r)} |")
             elif k in skips:
                 print(f"| {a} | {s} | — | — | — | skipped | — | — | — | {skips[k]['reason']} |")
+
+    if os.path.exists(args.trace_bench):
+        trace_section(args.trace_bench)
 
 
 if __name__ == "__main__":

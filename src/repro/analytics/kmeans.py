@@ -73,14 +73,15 @@ def fit(x, k: int, *, iters: int = 10, seed: int = 0,
 
     def thread_proc(ctx, pts):
         def step(_):                       # the shared centers carry the state
-            a, _dist = assign_fn(pts, centers.get())
-            sums, counts = _partials(pts, a, k)
-            flat = partials.accumulate(
-                jnp.concatenate([sums.reshape(-1), counts]), mode=mode)
-            sums_g = flat[: k * d].reshape(k, d)
-            counts_g = flat[k * d:]
-            # §4.5 pattern: every thread re-derives the identical center update
-            centers.set(sums_g / jnp.maximum(counts_g[:, None], 1.0))
+            with ctx.span("kmeans.round"):
+                a, _dist = assign_fn(pts, centers.get())
+                sums, counts = _partials(pts, a, k)
+                flat = partials.accumulate(
+                    jnp.concatenate([sums.reshape(-1), counts]), mode=mode)
+                sums_g = flat[: k * d].reshape(k, d)
+                counts_g = flat[k * d:]
+                # §4.5 pattern: every thread re-derives the identical center update
+                centers.set(sums_g / jnp.maximum(counts_g[:, None], 1.0))
             return _
         ctx.iterate(step, None, iters)
         return None

@@ -67,9 +67,10 @@ def fit(x, y, *, iters: int = 10, lr: float = 1e-3,
 
     def thread_proc(ctx, xs, ys):
         def step(theta):                              # one synchronous round
-            local = _local_grad(theta, xs, ys)        # lines 14–21
-            total = grad.accumulate(local, mode=mode)  # line 22 (sync point)
-            return theta + lr * total                 # lines 23–24
+            with ctx.span("logreg.round"):            # app-round marker (host)
+                local = _local_grad(theta, xs, ys)        # lines 14–21
+                total = grad.accumulate(local, mode=mode)  # line 22 (sync point)
+                return theta + lr * total             # lines 23–24
         # local theta (paper line 10) is the carry; host: guarded loop,
         # SPMD: one lax.scan — O(1) lowered program size in `iters`.
         return ctx.iterate(step, jnp.zeros((d,), jnp.float32), iters)
@@ -94,10 +95,11 @@ def fit_ssp(x, y, *, n_workers: int = 4, staleness: int = 1, iters: int = 10,
 
     def worker(ctx, xs, ys):
         def step(_):
-            g = _local_grad(theta.get(), xs, ys)   # possibly stale replica
-            theta.inc(lr * g)                      # atomic DSM update
-            clock.tick(ctx.tid)
-            clock.wait(ctx.tid)                    # bounded staleness
+            with ctx.span("logreg.ssp_round"):
+                g = _local_grad(theta.get(), xs, ys)   # possibly stale replica
+                theta.inc(lr * g)                      # atomic DSM update
+                clock.tick(ctx.tid)
+                clock.wait(ctx.tid)                    # bounded staleness
             return _
         ctx.iterate(step, None, iters)             # host-only: clock is a
                                                    # Python-side effect

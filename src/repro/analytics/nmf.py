@@ -68,14 +68,15 @@ def fit(r, k: int, *, iters: int = 10, seed: int = 0,
 
     def thread_proc(ctx, r_loc, p_loc):
         def step(p):                        # thread-local P rides in the carry
-            q = Q.get()
-            p = _update_p(p, q, r_loc)
-            numer, gram = _q_partials(p, r_loc)
-            flat = q_partials.accumulate(
-                jnp.concatenate([numer.reshape(-1), gram.reshape(-1)]), mode=mode)
-            numer_g = flat[: k * m].reshape(k, m)
-            gram_g = flat[k * m:].reshape(k, k)
-            Q.set(q * numer_g / (gram_g @ q + _EPS))
+            with ctx.span("nmf.round"):
+                q = Q.get()
+                p = _update_p(p, q, r_loc)
+                numer, gram = _q_partials(p, r_loc)
+                flat = q_partials.accumulate(
+                    jnp.concatenate([numer.reshape(-1), gram.reshape(-1)]), mode=mode)
+                numer_g = flat[: k * m].reshape(k, m)
+                gram_g = flat[k * m:].reshape(k, k)
+                Q.set(q * numer_g / (gram_g @ q + _EPS))
             return p
         return ctx.iterate(step, p_loc, iters)
 

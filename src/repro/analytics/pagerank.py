@@ -63,9 +63,10 @@ def fit(edges, n_vertices: int, *, iters: int = 10,
         src, dst = edges_loc[:, 0], edges_loc[:, 1]
 
         def step(_):                       # the shared ranks carry the state
-            total = credits.accumulate(
-                _credits(src, dst, ranks.get(), deg, n_vertices), mode=mode)
-            ranks.set((1 - DAMPING) / n_vertices + DAMPING * total)
+            with ctx.span("pagerank.round"):
+                total = credits.accumulate(
+                    _credits(src, dst, ranks.get(), deg, n_vertices), mode=mode)
+                ranks.set((1 - DAMPING) / n_vertices + DAMPING * total)
             return _
         ctx.iterate(step, None, iters)
         return None

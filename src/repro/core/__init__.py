@@ -8,6 +8,7 @@
 - :mod:`repro.core.sync` - DBarrier / DSemaphore / SSP clock
 - :mod:`repro.core.threads` - DThread pool + shard_map SPMD adapter
 - :mod:`repro.core.addressing` - the 64-bit DSM address space
+- :mod:`repro.core.telemetry` - step.trace: spans/counters/histograms + export
 - :mod:`repro.core.compat` - shims over moving JAX APIs (shard_map, meshes)
 
 Most programs need only :class:`~repro.core.session.Session`: it owns the
@@ -15,6 +16,7 @@ store, cache, thread pool, sync controller and accumulator registry, and the
 same workload code runs on the host or SPMD backend.
 """
 
+from repro.core import telemetry
 from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate, accumulate_scatter, accumulate_tree
 from repro.core.addressing import AddressAllocator, make_address, ring_hash, split_address, watcher_node
 from repro.core.cache import DSMCache, CacheStats
@@ -24,6 +26,7 @@ from repro.core.session import Backend, HostBackend, Session, SharedRef, SpmdBac
 from repro.core.shards import HashRing, Shard, ShardedStore, ShardMigration
 from repro.core.sparse import blocked_topk_sparsify, densify, sparse_beneficial, sparse_beneficial_batch, topk_sparsify
 from repro.core.sync import DBarrier, DSemaphore, SSPClock
+from repro.core.telemetry import NULL_TRACER, Tracer, as_tracer
 from repro.core.threads import DThread, DThreadPool, ThreadState, spmd_threads
 
 __all__ = [
@@ -36,5 +39,6 @@ __all__ = [
     "HashRing", "Shard", "ShardedStore", "ShardMigration",
     "blocked_topk_sparsify", "densify", "sparse_beneficial", "sparse_beneficial_batch", "topk_sparsify",
     "DBarrier", "DSemaphore", "SSPClock",
+    "telemetry", "Tracer", "NULL_TRACER", "as_tracer",
     "DThread", "DThreadPool", "ThreadState", "spmd_threads",
 ]

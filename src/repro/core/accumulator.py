@@ -36,12 +36,14 @@ when they are lossless AND cheaper, so it never changes results.
 from __future__ import annotations
 
 import threading
+import time
 from enum import Enum
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry
 from repro.core.addressing import align_up
 from repro.core.compat import axis_size as compat_axis_size
 from repro.core.sparse import (
@@ -200,8 +202,10 @@ class DAddAccumulator:
 
     def __init__(self, store, output_name: str, n_threads: int, n_nodes: int,
                  mode: AccumMode | str = AccumMode.REDUCE_SCATTER, *,
-                 k: Optional[int] = None, block: int = DEFAULT_BLOCK):
+                 k: Optional[int] = None, block: int = DEFAULT_BLOCK,
+                 tracer=None):
         self.store = store
+        self.tracer = tracer if tracer is not None else telemetry.NULL_TRACER
         self.output_name = output_name
         self.n = n_threads
         self.m = max(1, n_nodes)
@@ -250,6 +254,10 @@ class DAddAccumulator:
 
     def _reduce_round(self) -> None:
         """Runs under the lock when the round's last contribution arrives."""
+        trc = self.tracer
+        tracing = telemetry.TRACING and trc.enabled
+        t0 = time.perf_counter() if tracing else 0.0
+        wire_before = self.bytes_transferred
         vec_len, shape = self._round_len, self._round_shape
         if self.mode in self._DENSE_MODES:
             total = self._partial
@@ -271,7 +279,11 @@ class DAddAccumulator:
                 all_ok = bool(sparse_beneficial_batch(flats, k, self.block))
                 mode = AccumMode.SPARSE if all_ok else AccumMode.REDUCE_SCATTER
             if mode == AccumMode.SPARSE:
+                tc = time.perf_counter() if tracing else 0.0
                 pairs = [blocked_topk_sparsify(f, k, self.block) for f in flats]
+                if tracing:
+                    trc.observe("accumulate.compress",
+                                (time.perf_counter() - tc) * 1e6)
                 # one scatter-add over the concatenated pair arrays — the same
                 # "densify everything at once" the SPMD all-gather path does
                 total = densify(jnp.concatenate([p.idx for p in pairs]),
@@ -290,10 +302,36 @@ class DAddAccumulator:
         self.last_mode = mode
         self.store.set(self.output_name, total)
         self.rounds += 1
+        if tracing:
+            trc.count("accumulate.rounds")
+            trc.count("accumulate.wire_elements",
+                      self.bytes_transferred - wire_before)
+            trc.add_span("accumulate-round", "accumulate.round", t0,
+                         time.perf_counter(),
+                         {"mode": mode.value, "vec_len": vec_len,
+                          "threads": self.n,
+                          "pairs": sum(self.last_pair_counts),
+                          "wire_elements":
+                              self.bytes_transferred - wire_before})
         self._reset_round()
 
     def accumulate(self, local_vec) -> None:
-        """Paper's ``Accumulate`` — synchronization point across all N threads."""
+        """Paper's ``Accumulate`` — synchronization point across all N threads.
+
+        With an armed tracer, each call records one per-thread span (category
+        ``accumulate-round``, name ``accumulate``, entry→barrier release) plus
+        a ``barrier-wait`` span for the time parked on the round barrier; the
+        round-closing thread additionally records the ``accumulate.round``
+        reduce span from :meth:`_reduce_round`."""
+        trc = self.tracer
+        if telemetry.TRACING and trc.enabled:
+            t0 = time.perf_counter()
+            self._accumulate(local_vec, trc)
+            trc.wait_span("accumulate-round", "accumulate", t0)
+        else:
+            self._accumulate(local_vec, None)
+
+    def _accumulate(self, local_vec, trc) -> None:
         local_vec = jnp.asarray(local_vec)
         with self._lock:
             if self._broken:
@@ -330,7 +368,12 @@ class DAddAccumulator:
                     self._abort_round()
                     self._reset_round()
                     raise
-        self._barrier.wait()
+        if trc is not None:
+            tb = time.perf_counter()
+            self._barrier.wait()
+            trc.wait_span("barrier-wait", "accumulate.barrier", tb)
+        else:
+            self._barrier.wait()
 
     # paper-cased alias
     Accumulate = accumulate

@@ -30,6 +30,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from repro.core import telemetry
 from repro.core.shards import ShardedStore
 
 
@@ -46,6 +47,16 @@ class CacheStats:
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        """Canonical plain-dict view (the ``cache`` rows of
+        ``Session.metrics()``); key set pinned by
+        :data:`repro.core.telemetry.CACHE_METRIC_KEYS`."""
+        return {"hits": self.hits, "misses": self.misses,
+                "invalidations": self.invalidations,
+                "write_messages": self.write_messages,
+                "missing_messages": self.missing_messages,
+                "evictions": self.evictions, "hit_rate": self.hit_rate}
 
 
 class _NodeCache:
@@ -109,6 +120,9 @@ class DSMCache:
         # weak: the store outlives sessions rolled over it (FT recovery);
         # this cache's teardown hook must die with the cache, not pin it
         store.add_delete_hook(self.drop, weak=True)
+        # step.trace target (Session attaches its tracer); coherence events
+        # are counters, not spans — timing lives on the store ops beneath
+        self.tracer = telemetry.NULL_TRACER
 
     def _shard_stats(self, shard_id: int) -> CacheStats:
         return self._stats.setdefault(shard_id, CacheStats())
@@ -160,22 +174,30 @@ class DSMCache:
             return
         with self.store.locked_owner(evicted) as shard:
             self._shard_stats(shard.id).evictions += 1
+        if telemetry.TRACING and self.tracer.enabled:
+            self.tracer.count("cache.evictions")
         self._forget_holder(node_id, evicted)
 
     # -- reads ---------------------------------------------------------------
 
     def read(self, node_id: int, name: str):
         evicted = None
+        trc = self.tracer
+        tracing = telemetry.TRACING and trc.enabled
         try:
             with self.store.locked_entry(name) as (shard, entry):
                 stats = self._shard_stats(shard.id)
                 cached = self.caches[node_id].get(name)
                 if cached is not None and cached[0] == entry.epoch:
                     stats.hits += 1
+                    if tracing:
+                        trc.count("cache.replica_hits")
                     return cached[1]
                 # miss: fetch through the DSM internal layer + tell the watcher
                 stats.misses += 1
                 stats.missing_messages += 1
+                if tracing:
+                    trc.count("cache.replica_misses")
                 value = self.store.get(name)   # re-entrant on the held shard lock
                 evicted = self.caches[node_id].put(name, entry.epoch, value)
                 shard.directory.setdefault(name, set()).add(node_id)
@@ -198,8 +220,15 @@ class DSMCache:
                 holders = shard.directory.get(name, set())
                 for holder in list(holders):
                     if holder != node_id:
-                        if self.caches[holder].invalidate(name):
+                        # the store outlives sessions (FT recovery rolls a
+                        # smaller world over it): a holder id beyond this
+                        # session's node count is a dead session's record —
+                        # there is no replica to invalidate, just drop it
+                        if (holder < len(self.caches)
+                                and self.caches[holder].invalidate(name)):
                             stats.invalidations += 1
+                            if telemetry.TRACING and self.tracer.enabled:
+                                self.tracer.count("cache.invalidations")
                         holders.discard(holder)
                 # the writer keeps (updates) its own replica
                 evicted = self.caches[node_id].put(name, entry.epoch, value)

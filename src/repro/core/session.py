@@ -50,6 +50,7 @@ shared-value dict is threaded through the scan carry, which is what keeps
 from __future__ import annotations
 
 import threading
+import time
 import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, runtime_checkable
@@ -58,6 +59,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import telemetry
 from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate as spmd_accumulate
 from repro.core.cache import CacheStats, DSMCache
 from repro.core.compat import make_mesh, shard_map
@@ -176,6 +178,16 @@ class WorkerCtx:
     def barrier(self, timeout: Optional[float] = None) -> bool:
         return True
 
+    # -- tracing -------------------------------------------------------------
+
+    def span(self, name: str, **args):
+        """A user-labelled span (category ``app-round``) on this thread's
+        timeline — the hook the analytics apps use to mark one algorithm
+        round.  A real span on the host backend; a no-op under SPMD, where
+        the step body is traced once and per-round host timestamps would
+        lie about device execution."""
+        return telemetry.NULL_SPAN
+
     # -- iteration engine ----------------------------------------------------
 
     def iterate(self, step: Callable, carry, iters: int):
@@ -223,6 +235,12 @@ class HostWorkerCtx(WorkerCtx):
 
     def barrier(self, timeout: Optional[float] = None) -> bool:
         return self._backend.run_barrier.enter(timeout)
+
+    def span(self, name: str, **args):
+        trc = self._session.tracer
+        if telemetry.TRACING and trc.enabled:
+            return trc.span("app-round", name, **args)
+        return telemetry.NULL_SPAN
 
     # -- iteration: the paper's programming model, round by round ------------
 
@@ -273,6 +291,13 @@ class SpmdWorkerCtx(WorkerCtx):
         iters = int(iters)
         if iters <= 0:
             return carry
+        trc = self._session.tracer
+        if telemetry.TRACING and trc.enabled:
+            # fori runs at *trace* time under SPMD: account the scan site and
+            # its executed trip count (nested loops multiply through
+            # _accum_repeat) — per-trip host spans would not exist anyway.
+            trc.count("spmd.scan_sites")
+            trc.count("spmd.scan_trips", iters * self._accum_repeat)
         # The shared-value dict rides in the scan carry: ref.get/set/accumulate
         # inside `step` read and write the scanned copy, so shared state
         # advances per round exactly as it does on the host backend.
@@ -445,7 +470,8 @@ class HostBackend:
                     return matches[0]
             if accu is None:
                 accu = DAddAccumulator(session.store, name, self.n_threads,
-                                       self.n_nodes, mode, k=k)
+                                       self.n_nodes, mode, k=k,
+                                       tracer=session.tracer)
                 self._accumulators[key] = accu
             return accu
 
@@ -457,6 +483,9 @@ class HostBackend:
             lo_hi = [partition_rows(a.shape[0], tid, n) for a in data]
             shards = [a[lo:hi] for a, (lo, hi) in zip(data, lo_hi)]
             ctx = HostWorkerCtx(session, self, tid)
+            if telemetry.TRACING and session.tracer.enabled:
+                # spans from this OS thread land on (node, tid) timelines
+                session.tracer.bind_thread(tid, ctx.node_id)
             session._tls.ctx = ctx
             try:
                 return thread_proc(ctx, *shards, *broadcast)
@@ -640,7 +669,17 @@ class SpmdBackend:
         thread_proc, data, broadcast = self._pending
         self._pending = None
         n = self.n_threads
+        trc = session.tracer
+        tracing = telemetry.TRACING and trc.enabled
+        wire_before = self.stats.bytes_transferred
+        t0 = time.perf_counter() if tracing else 0.0
         f, data, names, auto_box = self._compile(session, thread_proc, data, broadcast)
+        if tracing:
+            # trace-time counters (scan trips, provisional traffic) landed
+            # during _compile; the span brackets trace + jit dispatch setup
+            trc.add_span("spmd", "spmd.trace", t0, time.perf_counter(),
+                         {"threads": n})
+            t1 = time.perf_counter()
         stacked_result, stacked_shared, stacked_counts = f(*data, *broadcast)
         # settle every AUTO call site's trace-time dense bound against the
         # branch counter the device actually accumulated (globally agreed, so
@@ -649,7 +688,16 @@ class SpmdBackend:
             self.stats.settle_auto(meta, int(jax.device_get(counts)[0]))
         for m in names:
             session.store.set(m, jax.tree.map(lambda x: x[0], stacked_shared[m]))
-        return [jax.tree.map(lambda x, i=i: x[i], stacked_result) for i in range(n)]
+        out = [jax.tree.map(lambda x, i=i: x[i], stacked_result) for i in range(n)]
+        if tracing:
+            # device code can't emit host events mid-program: like AUTO
+            # traffic, collective accounting settles once, at join
+            trc.add_span("spmd", "spmd.execute", t1, time.perf_counter(),
+                         {"threads": n})
+            trc.count("spmd.joins")
+            trc.count("spmd.collective_elements",
+                      self.stats.bytes_transferred - wire_before)
+        return out
 
     def wire_traffic(self) -> int:
         return self.stats.bytes_transferred
@@ -681,6 +729,14 @@ class Session:
         when adopting ``store``).  ``1`` is the paper's single flat store;
         larger counts let workers touching different shards read/write/inc
         concurrently — there is no session-global cache lock.
+    trace:
+        ``step.trace`` arming: ``True`` arms a fresh
+        :class:`~repro.core.telemetry.Tracer`, an existing tracer is adopted
+        as-is (how FT recovery re-arms a replacement session), and the
+        default ``None`` leaves tracing *off* — a disabled tracer whose hot
+        paths cost one attribute check and allocate nothing.  Inspect via
+        ``session.tracer`` / :meth:`metrics`; export with
+        ``session.tracer.export(path)``.
     """
 
     def __init__(self, backend: Backend | str = "host", *,
@@ -690,7 +746,8 @@ class Session:
                  granularity: str = "coarse",
                  shards: int = 1,
                  accum_mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
-                 cache_capacity: int = 1024):
+                 cache_capacity: int = 1024,
+                 trace: "telemetry.Tracer | bool | None" = None):
         if isinstance(backend, str):
             if backend == "host":
                 backend = HostBackend(n_nodes, threads_per_node)
@@ -699,11 +756,20 @@ class Session:
             else:
                 raise ValueError(f"backend must be host|spmd, got {backend!r}")
         self.backend = backend
+        # step.trace: trace=True arms a fresh tracer; a Tracer instance is
+        # adopted as-is (FT recovery re-arms the failed session's tracer);
+        # the default is a *disabled* tracer — hot paths see a false
+        # `tracer.enabled` behind the module flag and allocate nothing.
+        self.tracer = telemetry.as_tracer(trace)
         self.store = store if store is not None else GlobalStore(
             granularity=granularity, shards=shards)
+        self.store.tracer = self.tracer
         self.accum_mode = AccumMode(accum_mode)
         self.cache = DSMCache(self.store, n_nodes=backend.n_nodes,
                               capacity=cache_capacity)
+        self.cache.tracer = self.tracer
+        if backend.kind == "host":
+            backend.run_barrier.tracer = self.tracer
         self._sparse_k: Dict[str, int] = {}  # per-ref default top-k budgets
         self._tls = threading.local()
 
@@ -803,6 +869,9 @@ class Session:
                                "the host backend does not trace thread_proc")
         data = tuple(jnp.asarray(a) for a in data)
         broadcast = tuple(jnp.asarray(b) for b in broadcast)
+        if telemetry.TRACING and self.tracer.enabled:
+            with self.tracer.span("spmd", "spmd.lower"):
+                return self.backend.lower(self, thread_proc, data, broadcast)
         return self.backend.lower(self, thread_proc, data, broadcast)
 
     def kill_node(self, node_id: int) -> List[int]:
@@ -825,14 +894,22 @@ class Session:
     # -- Table 1: synchronization ---------------------------------------------
 
     def barrier(self, count: Optional[int] = None) -> DBarrier:
-        """A counter barrier sized to the session's threads by default."""
-        return DBarrier(count or self.backend.n_threads)
+        """A counter barrier sized to the session's threads by default.
+        Carries the session's tracer: every ``enter`` records a per-thread
+        entry→release ``barrier-wait`` span when tracing is armed."""
+        b = DBarrier(count or self.backend.n_threads)
+        b.tracer = self.tracer
+        return b
 
     def semaphore(self, count: int = 1) -> DSemaphore:
-        return DSemaphore(count)
+        s = DSemaphore(count)
+        s.tracer = self.tracer
+        return s
 
     def ssp_clock(self, staleness: int = 0, n_workers: Optional[int] = None) -> SSPClock:
-        return SSPClock(n_workers or self.backend.n_threads, staleness=staleness)
+        c = SSPClock(n_workers or self.backend.n_threads, staleness=staleness)
+        c.tracer = self.tracer
+        return c
 
     # -- accumulator registry / stats -----------------------------------------
 
@@ -848,14 +925,46 @@ class Session:
         return self.backend.wire_traffic()
 
     def stats(self) -> Dict[str, Any]:
+        """Deprecated view: the original raw-counter triple.  Kept intact for
+        existing callers; new code should use :meth:`metrics`, which returns
+        the canonical normalized key set plus the tracer snapshot."""
         return {"store": dict(self.store.stats), "cache": self.cache.stats,
                 "wire_traffic": self.wire_traffic()}
+
+    def metrics(self) -> Dict[str, Any]:
+        """The unified observability snapshot (supersedes :meth:`stats` /
+        :meth:`shard_stats` without breaking them).  Key set pinned by
+        :data:`repro.core.telemetry.SESSION_METRIC_KEYS`:
+
+        * ``backend`` — ``"host"`` | ``"spmd"``
+        * ``store`` — canonical store counters
+          (:data:`~repro.core.telemetry.STORE_METRIC_KEYS`)
+        * ``cache`` — canonical coherence counters
+          (:data:`~repro.core.telemetry.CACHE_METRIC_KEYS`)
+        * ``wire_traffic`` — accumulator elements, host/SPMD comparable
+        * ``shards`` — per-shard ``{store, cache, wire_traffic}`` rows with
+          the same canonical shapes
+        * ``trace`` — :meth:`Tracer.snapshot` (span counts, counters,
+          latency histograms); ``{"enabled": False, ...}`` when unarmed
+        """
+        shard_rows = {
+            sid: {"store": telemetry.normalize_store_stats(row["store"]),
+                  "cache": row["cache"].as_dict(),
+                  "wire_traffic": row["wire_traffic"]}
+            for sid, row in self.shard_stats().items()}
+        return {"backend": self.backend.kind,
+                "store": telemetry.normalize_store_stats(self.store.stats),
+                "cache": self.cache.stats.as_dict(),
+                "wire_traffic": self.wire_traffic(),
+                "shards": shard_rows,
+                "trace": self.tracer.snapshot()}
 
     def shard_stats(self) -> Dict[int, Dict[str, Any]]:
         """Per-shard view of the session, keyed by shard id: the store's op
         counters (+ entry count + migration counts), the cache's coherence
         counters, and accumulator wire traffic attributed to the shard owning
-        each output ref."""
+        each output ref.  Deprecated view — raw counter shapes; the
+        normalized per-shard rows live in ``metrics()["shards"]``."""
         cache_rows = self.cache.shard_stats()
         out: Dict[int, Dict[str, Any]] = {
             sid: {"store": row, "cache": cache_rows.get(sid, CacheStats()),

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import bisect
 import threading
+import time
 import weakref
 from contextlib import contextmanager
 from dataclasses import dataclass, field
@@ -50,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import telemetry
 from repro.core.addressing import (
     AddressAllocator,
     FieldSlot,
@@ -195,6 +197,10 @@ class ShardedStore:
         self._ring = HashRing(range(shards), vnodes=vnodes)
         self._rebalance_lock = threading.Lock()
         self._delete_hooks: List[Callable[[str], None]] = []
+        # step.trace instrumentation target; Session attaches its tracer here.
+        # Disabled default + the module-level TRACING guard keep every store
+        # op at one extra branch when nothing is armed.
+        self.tracer = telemetry.NULL_TRACER
 
     # -- topology -------------------------------------------------------------
 
@@ -213,6 +219,18 @@ class ShardedStore:
         """Owning :class:`Shard` handle of ``name`` (lock NOT held)."""
         return self._shards[self._ring.owner(name)]
 
+    def _lock_shard(self, shard: Shard) -> None:
+        """Acquire a shard's lock, recording the wait when tracing is armed
+        (the per-shard contention signal the ROADMAP's overlap work needs)."""
+        trc = self.tracer
+        if telemetry.TRACING and trc.enabled:
+            t0 = time.perf_counter()
+            shard.lock.acquire()
+            trc.observe("store.lock_wait", (time.perf_counter() - t0) * 1e6,
+                        shard=shard.id)
+        else:
+            shard.lock.acquire()
+
     @contextmanager
     def locked_entry(self, name: str):
         """Yield ``(shard, entry)`` with the owning shard's lock held.
@@ -225,13 +243,16 @@ class ShardedStore:
         while True:
             ring = self._ring
             shard = self._shards[ring.owner(name)]
-            with shard.lock:
+            self._lock_shard(shard)
+            try:
                 entry = shard.entries.get(name)
                 if entry is not None:
                     yield shard, entry
                     return
                 if self._ring is ring:
                     raise KeyError(name)
+            finally:
+                shard.lock.release()
             # the ring moved under us — resolve the new owner and retry
 
     @contextmanager
@@ -241,10 +262,13 @@ class ShardedStore:
         while True:
             ring = self._ring
             shard = self._shards[ring.owner(name)]
-            with shard.lock:
+            self._lock_shard(shard)
+            try:
                 if self._ring is ring:
                     yield shard
                     return
+            finally:
+                shard.lock.release()
 
     # -- elastic rebalancing ---------------------------------------------------
 
@@ -438,13 +462,22 @@ class ShardedStore:
         return jax.device_put(value, self._sharding(spec))
 
     def get(self, name: str):
+        trc = self.tracer
+        tracing = telemetry.TRACING and trc.enabled
+        t0 = time.perf_counter() if tracing else 0.0
         with self.locked_entry(name) as (shard, e):
             shard.stats["get"] += 1
             shard.stats["bytes_get"] += _nbytes(e.value)
             shard.stats["transfers"] += self._transfer_count(e.value)
-            return e.value
+            value, sid = e.value, shard.id
+        if tracing:
+            trc.store_op("get", sid, t0, name=name)
+        return value
 
     def set(self, name: str, value, *, bump_epoch: bool = True) -> None:
+        trc = self.tracer
+        tracing = telemetry.TRACING and trc.enabled
+        t0 = time.perf_counter() if tracing else 0.0
         with self.locked_entry(name) as (shard, e):
             if isinstance(e.value, dict):
                 specs = e.field_specs or {}
@@ -460,10 +493,16 @@ class ShardedStore:
             shard.stats["set"] += 1
             shard.stats["bytes_set"] += _nbytes(e.value)
             shard.stats["transfers"] += self._transfer_count(e.value)
+            sid = shard.id
+        if tracing:
+            trc.store_op("set", sid, t0, name=name)
 
     def mget(self, names) -> list:
         """``MGet`` — batched get, one logical round trip *per shard touched*
         (names are grouped by owner, each group read under one lock hold)."""
+        trc = self.tracer
+        tracing = telemetry.TRACING and trc.enabled
+        t0 = time.perf_counter() if tracing else 0.0
         names = list(names)
         vals: list = [None] * len(names)
         ring = self._ring
@@ -490,6 +529,11 @@ class ShardedStore:
                     shard.stats["bytes_get"] += got_bytes
             for i in stragglers:
                 vals[i] = self.get(names[i])
+        if tracing:
+            t1 = time.perf_counter()
+            trc.add_span("store-op", "store.mget", t0, t1,
+                         {"names": len(names), "shards": len(groups)})
+            trc.observe("store.mget", (t1 - t0) * 1e6)
         return vals
 
     def inc(self, name: str, amount=1):
@@ -499,13 +543,19 @@ class ShardedStore:
         different shards proceed concurrently), re-placed with the entry's
         declared spec, and accounted like any other DSM write.
         """
+        trc = self.tracer
+        tracing = telemetry.TRACING and trc.enabled
+        t0 = time.perf_counter() if tracing else 0.0
         with self.locked_entry(name) as (shard, e):
             e.value = self._place(jnp.asarray(e.value) + amount, e.spec)
             e.epoch += 1
             shard.stats["inc"] += 1
             shard.stats["bytes_set"] += _nbytes(e.value)
             shard.stats["transfers"] += self._transfer_count(e.value)
-            return e.value
+            value, sid = e.value, shard.id
+        if tracing:
+            trc.store_op("inc", sid, t0, name=name)
+        return value
 
     def epoch(self, name: str) -> int:
         with self.locked_entry(name) as (_, e):
@@ -546,6 +596,17 @@ class ShardedStore:
                 row["names"] = len(shard.entries)
             out[sid] = row
         return out
+
+    def metrics(self) -> Dict[str, Any]:
+        """Aggregate counters under the canonical (normalized) key set —
+        :data:`repro.core.telemetry.STORE_METRIC_KEYS`.  The raw ``stats``
+        property keeps the legacy singular-verb keys as a deprecated view."""
+        return telemetry.normalize_store_stats(self.stats)
+
+    def shard_metrics(self) -> Dict[int, Dict[str, Any]]:
+        """Per-shard :meth:`metrics` rows (normalized ``shard_stats``)."""
+        return {sid: telemetry.normalize_store_stats(row)
+                for sid, row in self.shard_stats().items()}
 
     @property
     def _entries(self) -> Dict[str, GlobalEntry]:

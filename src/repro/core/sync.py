@@ -15,12 +15,20 @@ this is the straggler-mitigation knob for the training path.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from typing import Dict, Optional
 
+from repro.core import telemetry
+
 
 class DBarrier:
-    """Counter-based barrier with the paper's ``Enter(timeout)`` API."""
+    """Counter-based barrier with the paper's ``Enter(timeout)`` API.
+
+    When a tracer is armed (``barrier.tracer``, attached by
+    ``Session.barrier()`` and to the backend's run barrier), every ``enter``
+    records a per-thread entry→release span (category ``barrier-wait``) and
+    feeds the ``barrier.wait`` latency histogram."""
 
     def __init__(self, count: int):
         self.count = count
@@ -28,8 +36,18 @@ class DBarrier:
         self._arrived = 0
         self._generation = 0
         self.entries = 0  # stats: total Enter calls observed by the controller
+        self.tracer = telemetry.NULL_TRACER
 
     def enter(self, timeout: Optional[float] = None) -> bool:
+        trc = self.tracer
+        if telemetry.TRACING and trc.enabled:
+            t0 = time.perf_counter()
+            ok = self._enter(timeout)
+            trc.wait_span("barrier-wait", "barrier.wait", t0, released=ok)
+            return ok
+        return self._enter(timeout)
+
+    def _enter(self, timeout: Optional[float] = None) -> bool:
         with self._cond:
             gen = self._generation
             self._arrived += 1
@@ -61,12 +79,25 @@ class DSemaphore:
         self._cond = threading.Condition()
         self._queue: deque[int] = deque()
         self._ticket = 0
+        self.tracer = telemetry.NULL_TRACER
 
     def acquire(self, timeout: Optional[float] = None) -> bool:
+        trc = self.tracer
+        if telemetry.TRACING and trc.enabled:
+            t0 = time.perf_counter()
+            ok = self._acquire(timeout)
+            trc.wait_span("sync", "semaphore.acquire", t0, acquired=ok)
+            return ok
+        return self._acquire(timeout)
+
+    def _acquire(self, timeout: Optional[float] = None) -> bool:
+        trc = self.tracer
         with self._cond:
             ticket = self._ticket
             self._ticket += 1
             self._queue.append(ticket)
+            if telemetry.TRACING and trc.enabled:
+                trc.observe("semaphore.queue_depth", float(len(self._queue)))
             t = None if (timeout is None or timeout < 0) else timeout
             while not (self._count > 0 and self._queue[0] == ticket):
                 if not self._cond.wait(timeout=t):
@@ -102,6 +133,7 @@ class SSPClock:
         self._clocks: Dict[int, int] = {i: 0 for i in range(n_workers)}
         self._cond = threading.Condition()
         self.block_events = 0
+        self.tracer = telemetry.NULL_TRACER
 
     def tick(self, tid: int) -> int:
         with self._cond:
@@ -110,12 +142,26 @@ class SSPClock:
             return self._clocks[tid]
 
     def wait(self, tid: int, timeout: Optional[float] = None) -> bool:
+        trc = self.tracer
+        tracing = telemetry.TRACING and trc.enabled
+        t0 = time.perf_counter() if tracing else 0.0
+        stalled = False
         with self._cond:
+            if tracing:
+                trc.observe(
+                    "ssp.skew",
+                    float(self._clocks[tid] - min(self._clocks.values())))
             while self._clocks[tid] - min(self._clocks.values()) > self.staleness:
                 self.block_events += 1
+                stalled = True
                 if not self._cond.wait(timeout=timeout):
+                    if tracing:
+                        trc.wait_span("sync", "ssp.stall", t0,
+                                      tid=tid, released=False)
                     return False
-            return True
+        if tracing and stalled:
+            trc.wait_span("sync", "ssp.stall", t0, tid=tid, released=True)
+        return True
 
     def min_clock(self) -> int:
         with self._cond:

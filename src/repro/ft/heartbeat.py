@@ -12,7 +12,31 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Set
+from typing import Any, Callable, Dict, List, Optional, Set
+
+
+def metrics_payload(session) -> Dict[str, Any]:
+    """A compact metrics snapshot for heartbeat payloads: op rates plus
+    barrier-wait latency quantiles, pulled from the session's tracer.  Cheap
+    (a handful of dict reads) and safe on a disabled tracer — everything
+    degenerates to zeros."""
+    snap = session.tracer.snapshot()
+    ops = snap.get("ops", {})
+    # barrier time has two sources: explicit DBarrier.enter waits and the
+    # accumulator's round barrier — merge them (count sums; quantiles take
+    # the slower source, a conservative straggler signal)
+    waits = [ops[n] for n in ("barrier.wait", "accumulate.barrier") if n in ops]
+    return {
+        "trace_enabled": snap.get("enabled", False),
+        "op_rates": {name: row.get("rate_per_s", 0.0)
+                     for name, row in ops.items()},
+        "barrier_wait_us": {
+            "p50": max((w["p50"] for w in waits), default=0.0),
+            "p99": max((w["p99"] for w in waits), default=0.0),
+            "count": sum(w["count"] for w in waits),
+        },
+        "wire_traffic": session.wire_traffic(),
+    }
 
 
 class HeartbeatMonitor:
@@ -23,6 +47,7 @@ class HeartbeatMonitor:
         self.check_interval = check_interval
         self.on_failure = on_failure
         self._last: Dict[int, float] = {n: time.monotonic() for n in node_ids}
+        self._payloads: Dict[int, Any] = {}
         self._dead: Set[int] = set()
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -31,10 +56,26 @@ class HeartbeatMonitor:
 
     # -- slave side ------------------------------------------------------------
 
-    def beat(self, node_id: int) -> None:
+    def beat(self, node_id: int, payload: Optional[Any] = None) -> None:
+        """Record a heartbeat; ``payload`` (typically :func:`metrics_payload`)
+        piggybacks the node's latest metrics snapshot on the liveness signal,
+        so the master sees op rates and barrier-wait quantiles without a
+        second channel."""
         with self._lock:
             if node_id not in self._dead:
                 self._last[node_id] = time.monotonic()
+                if payload is not None:
+                    self._payloads[node_id] = payload
+
+    # -- master-side payload inspection ----------------------------------------
+
+    def last_payload(self, node_id: int) -> Optional[Any]:
+        with self._lock:
+            return self._payloads.get(node_id)
+
+    def payloads(self) -> Dict[int, Any]:
+        with self._lock:
+            return dict(self._payloads)
 
     def should_pause(self) -> bool:
         """Workers poll this at barrier boundaries (virtual-barrier checkpoint)."""

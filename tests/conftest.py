@@ -13,6 +13,23 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _tracer_leak_guard():
+    """Fail any test that leaves an *enabled* tracer armed: step.trace is
+    no-op by default, and a leaked global arm would silently tax every test
+    (and benchmark) that runs after it."""
+    yield
+    telemetry = sys.modules.get("repro.core.telemetry")
+    if telemetry is None:
+        return
+    leaked = telemetry.armed_count()
+    if leaked:
+        telemetry.reset()
+        pytest.fail(f"test leaked {leaked} enabled tracer(s): disable() or "
+                    "reset() tracers you arm (Session(trace=True) tracers "
+                    "included) before the test returns")
+
+
 def run_subprocess_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
     """Run a code snippet in a fresh process with a forced host device count.
 

@@ -35,3 +35,34 @@ def test_declare_and_revive():
     assert dead == [0]
     mon.revive(0)
     assert mon.dead_nodes() == []
+
+
+def test_beat_carries_metrics_payload():
+    """Heartbeats piggyback a metrics snapshot; the master reads the latest
+    per node, and a dead node's payload stops updating."""
+    import jax.numpy as jnp
+
+    from repro.core import Session
+    from repro.ft import metrics_payload
+
+    mon = HeartbeatMonitor([0, 1], timeout=10)
+    sess = Session(backend="host", n_nodes=2, threads_per_node=1, trace=True)
+    try:
+        ref = sess.new_array("v", (8,))
+        sess.run(lambda ctx, xs: ref.accumulate(xs.sum(axis=0)),
+                 data=(jnp.ones((2, 8)),))
+        mon.beat(0, payload=metrics_payload(sess))
+        mon.beat(1, payload={"custom": 1})
+        p0 = mon.last_payload(0)
+        assert p0["trace_enabled"] and p0["wire_traffic"] == sess.wire_traffic()
+        assert p0["barrier_wait_us"]["count"] >= 2
+        assert mon.payloads()[1] == {"custom": 1}
+        # payloads are optional: a bare beat keeps the previous payload
+        mon.beat(0)
+        assert mon.last_payload(0) is p0
+        # dead nodes stop updating
+        mon.declare_dead(1)
+        mon.beat(1, payload={"custom": 2})
+        assert mon.last_payload(1) == {"custom": 1}
+    finally:
+        sess.tracer.disable()

@@ -328,6 +328,23 @@ def test_session_recovery_keeps_ring_when_shards_dont_follow_nodes():
     assert sess.store.shard_ids() == [0, 1, 3, 4, 5, 6, 7]
 
 
+def test_recovered_smaller_world_tolerates_stale_holder_records():
+    """The shard directory's holder ids are session-relative, but the store
+    outlives sessions: after FT recovery shrinks the world, a record left by
+    the dead session's highest node must not be used to index the smaller
+    session's replica list (was an IndexError whenever the old last writer
+    was a node beyond the new world — ~1/4 of recovery-drill runs)."""
+    store = GlobalStore(shards=2)
+    store.def_global("w", jnp.zeros(4))
+    old = Session(backend="host", n_nodes=4, threads_per_node=1, store=store)
+    old.cache.write(3, "w", jnp.ones(4))      # node 3 is now the sole holder
+    new = Session(backend="host", n_nodes=2, threads_per_node=1, store=store)
+    new.cache.write(0, "w", jnp.full(4, 2.0))  # must drop the stale record
+    with store.locked_owner("w") as shard:
+        assert shard.directory["w"] == {0}
+    assert float(np.asarray(new.cache.read(1, "w"))[0]) == 2.0
+
+
 def test_delete_hooks_do_not_pin_dead_session_caches():
     """FT recovery rolls new sessions over a surviving store; each session's
     cache registers a delete hook.  The hooks must be weak: a collected
