@@ -23,6 +23,7 @@ BENCHES = [
     ("kernels", "benchmarks.bench_kernels"),                # Pallas μs/call
     ("compile", "benchmarks.bench_compile"),                # ctx.iterate O(1) claim
     ("trace", "benchmarks.bench_trace"),                    # step.trace overhead
+    ("check", "benchmarks.bench_check"),                    # step.check overhead
 ]
 
 

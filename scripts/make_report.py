@@ -79,6 +79,88 @@ def trace_section(bench_path):
               f"{r.get('enabled_overhead_pct_rw', 0.0):.1f}%.")
 
 
+def check_section(bench_path):
+    """§Correctness: the step.check overhead table from BENCH_check.json."""
+    r = json.load(open(bench_path))
+    print("\n### step.check overhead (benchmarks/BENCH_check.json)\n")
+    print("| workload | checker | seconds | ops/s | findings |")
+    print("|---|---|---|---|---|")
+    for wl, key in (("rw mix (S=8, 8 threads)", "rw"), ("logreg fit", "logreg")):
+        for state in ("noop", "disabled", "armed"):
+            row = r.get(f"{key}_{state}")
+            if row is None:
+                continue
+            ops = f"{row['ops_per_sec']:.0f}" if "ops_per_sec" in row else "—"
+            print(f"| {wl} | {state} | {row['seconds']:.4f} | {ops} | "
+                  f"{row['findings']} |")
+    pct = r.get("disabled_overhead_pct_rw")
+    if pct is not None:
+        ok = "within" if r.get("disabled_within_limit") else "OVER"
+        print(f"\nDisabled-checker overhead on the rw mix: **{pct:.2f}%** "
+              f"({ok} the {r.get('acceptance_limit_pct', 5.0):.0f}% budget); "
+              f"armed analysis costs "
+              f"{r.get('armed_overhead_pct_rw', 0.0):.1f}%.")
+
+
+def export_check_report(path):
+    """Run the four analytics apps under an armed checker plus the seeded
+    race from examples/race_demo.py, and export one findings JSON — the
+    artifact showing zero findings on real apps and a caught seeded race."""
+    import numpy as np
+
+    from repro.analytics import kmeans, logreg, nmf, pagerank
+    from repro.check import Checker
+    from repro.core import Session
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(128, 16)).astype(np.float32)
+    y = (rng.random(128) > 0.5).astype(np.float32)
+    pts = rng.normal(size=(96, 4)).astype(np.float32)
+    r = np.abs(rng.normal(size=(32, 16))).astype(np.float32)
+    edges = np.stack([rng.integers(0, 24, 80), rng.integers(0, 24, 80)],
+                     axis=1).astype(np.int32)
+
+    report = {"apps": {}, "seeded_race": None}
+    for name, call in (
+            ("logreg", lambda s: logreg.fit(x, y, iters=3, session=s)),
+            ("kmeans", lambda s: kmeans.fit(pts, 3, iters=3, session=s)),
+            ("nmf", lambda s: nmf.fit(r, 4, iters=3, session=s)),
+            ("pagerank", lambda s: pagerank.fit(edges, 24, iters=3, session=s))):
+        sess = Session(backend="host", n_nodes=2, threads_per_node=2,
+                       shards=8, check=True)
+        try:
+            call(sess)
+            report["apps"][name] = sess.checker.report()
+        finally:
+            sess.checker.disable()
+
+    ck = Checker(enabled=True)
+    try:
+        sess = Session(backend="host", n_nodes=1, threads_per_node=2,
+                       check=ck)
+        import jax.numpy as jnp
+        counter = sess.def_global("counter", jnp.float32(0))
+
+        def proc(ctx):
+            for _ in range(4):
+                v = counter.get()
+                counter.set(v + jnp.float32(ctx.tid + 1))
+            return None
+
+        sess.run(proc)
+        report["seeded_race"] = ck.report()
+    finally:
+        ck.disable()
+
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    clean = all(rep["count"] == 0 for rep in report["apps"].values())
+    caught = report["seeded_race"]["count"] > 0
+    print(f"wrote {path}: apps clean={clean}, "
+          f"seeded race caught={caught} "
+          f"({report['seeded_race']['count']} finding(s))")
+
+
 def export_sample_trace(path):
     """Run a small 2-thread logreg fit with tracing armed and export the
     Chrome-trace JSON — the artifact to drag into https://ui.perfetto.dev."""
@@ -110,14 +192,25 @@ def main():
     ap.add_argument("--export-trace", default=None, metavar="PATH",
                     help="run a traced 2-thread logreg fit and write the "
                          "Perfetto-loadable trace JSON to PATH, then exit")
+    ap.add_argument("--check-bench", default="benchmarks/BENCH_check.json",
+                    help="step.check overhead JSON (section skipped if absent)")
+    ap.add_argument("--export-check", default=None, metavar="PATH",
+                    help="run the four analytics apps and a seeded race "
+                         "under an armed checker and write the findings "
+                         "JSON to PATH, then exit")
     args = ap.parse_args()
     if args.export_trace:
         export_sample_trace(args.export_trace)
+        return
+    if args.export_check:
+        export_check_report(args.export_check)
         return
     if not os.path.isdir(args.out):
         print(f"# no dry-run records at {args.out}; skipping dryrun/roofline")
         if os.path.exists(args.trace_bench):
             trace_section(args.trace_bench)
+        if os.path.exists(args.check_bench):
+            check_section(args.check_bench)
         return
     recs, skips = load(args.out)
 
@@ -156,6 +249,8 @@ def main():
 
     if os.path.exists(args.trace_bench):
         trace_section(args.trace_bench)
+    if os.path.exists(args.check_bench):
+        check_section(args.check_bench)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""step.check — happens-before race detection, lock-order sanitizing, and a
+spawn-time lint pass for STEP programs.
+
+Armed per session via ``Session(check=True)`` (or an explicit
+:class:`Checker`); disabled by default with a one-branch hot-path cost, the
+same contract as :mod:`repro.trace`.
+
+``lint`` is deliberately not imported here: it pulls in ``repro.core`` and
+``repro.data`` lazily from inside the checker, keeping this package importable
+from the core modules that embed the hooks.
+"""
+
+from repro.check.checker import (CHECKING, Checker, NULL_CHECKER, armed_count,
+                                 as_checker, reset)
+from repro.check.findings import CheckError, Finding
+
+__all__ = ["CHECKING", "CheckError", "Checker", "Finding", "NULL_CHECKER",
+           "armed_count", "as_checker", "reset"]

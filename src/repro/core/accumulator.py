@@ -43,6 +43,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.check import checker as stepcheck
 from repro.core import telemetry
 from repro.core.addressing import align_up
 from repro.core.compat import axis_size as compat_axis_size
@@ -203,9 +204,10 @@ class DAddAccumulator:
     def __init__(self, store, output_name: str, n_threads: int, n_nodes: int,
                  mode: AccumMode | str = AccumMode.REDUCE_SCATTER, *,
                  k: Optional[int] = None, block: int = DEFAULT_BLOCK,
-                 tracer=None):
+                 tracer=None, checker=None):
         self.store = store
         self.tracer = tracer if tracer is not None else telemetry.NULL_TRACER
+        self.checker = checker if checker is not None else stepcheck.NULL_CHECKER
         self.output_name = output_name
         self.n = n_threads
         self.m = max(1, n_nodes)
@@ -323,6 +325,18 @@ class DAddAccumulator:
         a ``barrier-wait`` span for the time parked on the round barrier; the
         round-closing thread additionally records the ``accumulate.round``
         reduce span from :meth:`_reduce_round`."""
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            # publish this thread's clock into the round edge; the collective
+            # output write is recorded at the publish-time epoch after the
+            # round barrier releases, so peers' post-join clocks dominate it
+            token = ck.acc_begin(self)
+            self._accumulate_traced(local_vec)
+            ck.acc_done(self, self.output_name, token)
+            return
+        self._accumulate_traced(local_vec)
+
+    def _accumulate_traced(self, local_vec) -> None:
         trc = self.tracer
         if telemetry.TRACING and trc.enabled:
             t0 = time.perf_counter()

@@ -30,6 +30,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from repro.check import checker as stepcheck
 from repro.core import telemetry
 from repro.core.shards import ShardedStore
 
@@ -66,12 +67,26 @@ class _NodeCache:
     shards may race into the same node's LRU (the replica set is per *node*,
     not per shard)."""
 
-    def __init__(self, capacity: int):
+    def __init__(self, node_id: int, capacity: int):
+        self.id = node_id
         self.capacity = capacity
         self.blocks: OrderedDict[str, tuple[int, object]] = OrderedDict()
         self._lock = threading.Lock()
+        # step.check target: DSMCache propagates the session's checker here
+        # so node-lock acquisitions land in the lock-order sanitizer
+        self.checker = stepcheck.NULL_CHECKER
 
     def get(self, name: str):
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            ck.lock_acquired(("node", self.id))
+            try:
+                return self._get(name)
+            finally:
+                ck.lock_released(("node", self.id))
+        return self._get(name)
+
+    def _get(self, name: str):
         with self._lock:
             if name in self.blocks:
                 self.blocks.move_to_end(name)
@@ -82,6 +97,16 @@ class _NodeCache:
         """Insert a replica; returns the evicted name (LRU) or None.  The
         caller must drop the evicted name from the watcher directory, or the
         node stays listed as a holder forever."""
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            ck.lock_acquired(("node", self.id))
+            try:
+                return self._put(name, epoch, value)
+            finally:
+                ck.lock_released(("node", self.id))
+        return self._put(name, epoch, value)
+
+    def _put(self, name: str, epoch: int, value) -> Optional[str]:
         with self._lock:
             evicted = None
             if name not in self.blocks and len(self.blocks) >= self.capacity:
@@ -91,11 +116,31 @@ class _NodeCache:
             return evicted
 
     def invalidate(self, name: str) -> bool:
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            ck.lock_acquired(("node", self.id))
+            try:
+                return self._invalidate(name)
+            finally:
+                ck.lock_released(("node", self.id))
+        return self._invalidate(name)
+
+    def _invalidate(self, name: str) -> bool:
         with self._lock:
             return self.blocks.pop(name, None) is not None
 
     def contains(self, name: str) -> bool:
         """Membership without touching LRU order (eviction-cleanup guard)."""
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            ck.lock_acquired(("node", self.id))
+            try:
+                return self._contains(name)
+            finally:
+                ck.lock_released(("node", self.id))
+        return self._contains(name)
+
+    def _contains(self, name: str) -> bool:
         with self._lock:
             return name in self.blocks
 
@@ -114,7 +159,8 @@ class DSMCache:
     def __init__(self, store: ShardedStore, n_nodes: int, capacity: int = 1024):
         self.store = store
         self.n_nodes = n_nodes
-        self.caches = [_NodeCache(capacity) for _ in range(n_nodes)]
+        self.caches = [_NodeCache(i, capacity) for i in range(n_nodes)]
+        self._checker = stepcheck.NULL_CHECKER
         # per-shard coherence counters, aggregated by the `stats` property
         self._stats: Dict[int, CacheStats] = {}
         # weak: the store outlives sessions rolled over it (FT recovery);
@@ -123,6 +169,18 @@ class DSMCache:
         # step.trace target (Session attaches its tracer); coherence events
         # are counters, not spans — timing lives on the store ops beneath
         self.tracer = telemetry.NULL_TRACER
+
+    @property
+    def checker(self):
+        return self._checker
+
+    @checker.setter
+    def checker(self, ck) -> None:
+        """Session attaches its checker here; node LRUs share it so their
+        lock acquisitions land in the lock-order sanitizer."""
+        self._checker = ck
+        for c in self.caches:
+            c.checker = ck
 
     def _shard_stats(self, shard_id: int) -> CacheStats:
         return self._stats.setdefault(shard_id, CacheStats())

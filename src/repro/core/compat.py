@@ -9,7 +9,7 @@ builds a mesh or a shard_map goes through these two helpers.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 

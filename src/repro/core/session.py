@@ -57,8 +57,10 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, runt
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.check import checker as stepcheck
 from repro.core import telemetry
 from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate as spmd_accumulate
 from repro.core.cache import CacheStats, DSMCache
@@ -471,7 +473,8 @@ class HostBackend:
             if accu is None:
                 accu = DAddAccumulator(session.store, name, self.n_threads,
                                        self.n_nodes, mode, k=k,
-                                       tracer=session.tracer)
+                                       tracer=session.tracer,
+                                       checker=session.checker)
                 self._accumulators[key] = accu
             return accu
 
@@ -486,6 +489,11 @@ class HostBackend:
             if telemetry.TRACING and session.tracer.enabled:
                 # spans from this OS thread land on (node, tid) timelines
                 session.tracer.bind_thread(tid, ctx.node_id)
+            ck = session.checker
+            if stepcheck.CHECKING and ck.enabled:
+                # the worker's vector clock starts from the driver's spawn
+                # snapshot (the spawn happens-before edge)
+                ck.bind_thread(tid, ctx.node_id)
             session._tls.ctx = ctx
             try:
                 return thread_proc(ctx, *shards, *broadcast)
@@ -737,6 +745,15 @@ class Session:
         paths cost one attribute check and allocate nothing.  Inspect via
         ``session.tracer`` / :meth:`metrics`; export with
         ``session.tracer.export(path)``.
+    check:
+        ``step.check`` arming, same contract as ``trace``: ``True`` arms a
+        fresh :class:`~repro.check.Checker` (happens-before race detection,
+        lock-order sanitizing, and a spawn-time lint that rejects
+        structurally broken programs with
+        :class:`~repro.check.CheckError`), an existing checker is adopted
+        as-is, and the default ``None`` leaves checking off at one-branch
+        hot-path cost.  Inspect via ``session.checker`` / :meth:`findings`;
+        export with ``session.checker.export(path)``.
     """
 
     def __init__(self, backend: Backend | str = "host", *,
@@ -747,7 +764,8 @@ class Session:
                  shards: int = 1,
                  accum_mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
                  cache_capacity: int = 1024,
-                 trace: "telemetry.Tracer | bool | None" = None):
+                 trace: "telemetry.Tracer | bool | None" = None,
+                 check: "stepcheck.Checker | bool | None" = None):
         if isinstance(backend, str):
             if backend == "host":
                 backend = HostBackend(n_nodes, threads_per_node)
@@ -761,15 +779,22 @@ class Session:
         # the default is a *disabled* tracer — hot paths see a false
         # `tracer.enabled` behind the module flag and allocate nothing.
         self.tracer = telemetry.as_tracer(trace)
+        # step.check mirrors the arming contract: check=True arms a fresh
+        # checker; a Checker instance is adopted as-is (FT recovery re-arms
+        # the failed session's checker); default is disabled, one branch.
+        self.checker = stepcheck.as_checker(check)
         self.store = store if store is not None else GlobalStore(
             granularity=granularity, shards=shards)
         self.store.tracer = self.tracer
+        self.store.checker = self.checker
         self.accum_mode = AccumMode(accum_mode)
         self.cache = DSMCache(self.store, n_nodes=backend.n_nodes,
                               capacity=cache_capacity)
         self.cache.tracer = self.tracer
+        self.cache.checker = self.checker
         if backend.kind == "host":
             backend.run_barrier.tracer = self.tracer
+            backend.run_barrier.checker = self.checker
         self._sparse_k: Dict[str, int] = {}  # per-ref default top-k budgets
         self._tls = threading.local()
 
@@ -783,7 +808,9 @@ class Session:
         ``ref.accumulate(..., mode="sparse"|"auto")`` without an explicit
         ``k`` compresses with this budget on either backend."""
         self.store.def_global(name, value, spec=spec)
-        self._set_sparse_k(name, sparse_k)
+        self._set_sparse_k(name, sparse_k,
+                           size=None if sparse_k is None
+                           else int(jnp.asarray(value).size))
         return SharedRef(self, name)
 
     def new_array(self, name: str, shape, dtype=jnp.float32, *, spec=None,
@@ -791,15 +818,24 @@ class Session:
         """``NewArray`` — allocate a zeroed shared array.  ``sparse_k`` is the
         ref's default top-k budget for sparse/auto accumulates."""
         self.store.new_array(name, shape, dtype, spec=spec)
-        self._set_sparse_k(name, sparse_k)
+        self._set_sparse_k(name, sparse_k,
+                           size=None if sparse_k is None
+                           else int(np.prod(shape, dtype=np.int64)) if shape
+                           else 1)
         return SharedRef(self, name)
 
-    def _set_sparse_k(self, name: str, sparse_k: Optional[int]) -> None:
+    def _set_sparse_k(self, name: str, sparse_k: Optional[int],
+                      size: Optional[int] = None) -> None:
         self._sparse_k.pop(name, None)  # re-declared names drop the old budget
         if sparse_k is not None:
             if sparse_k < 1:
                 raise ValueError(f"sparse_k must be >= 1, got {sparse_k}")
             self._sparse_k[name] = int(sparse_k)
+            ck = self.checker
+            if stepcheck.CHECKING and ck.enabled and size is not None:
+                # declaration-time lint: a budget the blocked pair layout
+                # cannot ship is silently lossier than asked
+                ck.lint_sparse_budget(name, size, int(sparse_k))
 
     def sparse_k(self, name: str) -> Optional[int]:
         """The ref's declared default top-k budget (None if unset)."""
@@ -829,6 +865,14 @@ class Session:
         shard's lock — a concurrent worker read of the same name either
         completes before the delete or misses afterwards, never re-populates
         a deleted-era replica."""
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            # advisory directory peek (no lock): a delete while nodes still
+            # hold replicas is legal but worth a lint warning — a concurrent
+            # reader of the deleted era may be mid-flight
+            holders = set(self.store.shard_for(name).directory.get(name, ()))
+            if holders:
+                ck.check_delete(name, holders)
         self.store.delete(name)
         self._sparse_k.pop(name, None)
 
@@ -844,11 +888,25 @@ class Session:
         """
         data = tuple(jnp.asarray(a) for a in data)
         broadcast = tuple(jnp.asarray(b) for b in broadcast)
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            # lint dry run FIRST: a strict checker raises CheckError here —
+            # a structurally broken program is rejected before any thread
+            # (or any SPMD trace) exists
+            ck.lint_spawn(self, thread_proc, data, broadcast)
+            ck.on_spawn(self.backend.n_threads)
         self.backend.spawn(self, thread_proc, data, broadcast)
 
     def join(self, timeout: Optional[float] = None) -> List[Any]:
         """Join all threads; returns per-tid results."""
-        return self.backend.join(self, timeout)
+        try:
+            return self.backend.join(self, timeout)
+        finally:
+            ck = self.checker
+            if stepcheck.CHECKING and ck.enabled:
+                # the join happens-before edge: the driver's clock absorbs
+                # every worker's; the lock sanitizer's wait-for state resets
+                ck.after_join()
 
     def run(self, thread_proc: Callable, *, data: Sequence = (),
             broadcast: Sequence = (), timeout: Optional[float] = None) -> List[Any]:
@@ -899,16 +957,19 @@ class Session:
         entry→release ``barrier-wait`` span when tracing is armed."""
         b = DBarrier(count or self.backend.n_threads)
         b.tracer = self.tracer
+        b.checker = self.checker
         return b
 
     def semaphore(self, count: int = 1) -> DSemaphore:
         s = DSemaphore(count)
         s.tracer = self.tracer
+        s.checker = self.checker
         return s
 
     def ssp_clock(self, staleness: int = 0, n_workers: Optional[int] = None) -> SSPClock:
         c = SSPClock(n_workers or self.backend.n_threads, staleness=staleness)
         c.tracer = self.tracer
+        c.checker = self.checker
         return c
 
     # -- accumulator registry / stats -----------------------------------------
@@ -924,10 +985,19 @@ class Session:
         """Total accumulator wire traffic, in vector elements (paper §5.2)."""
         return self.backend.wire_traffic()
 
+    def findings(self) -> List[Any]:
+        """Findings recorded by this session's checker (see ``step.check``):
+        race/lock/lint :class:`~repro.check.Finding` rows.  Empty unless the
+        session was built with ``check=True`` (or an armed checker)."""
+        return self.checker.findings()
+
     def stats(self) -> Dict[str, Any]:
         """Deprecated view: the original raw-counter triple.  Kept intact for
         existing callers; new code should use :meth:`metrics`, which returns
         the canonical normalized key set plus the tracer snapshot."""
+        _warn_at_caller("Session.stats() is deprecated; use Session.metrics() "
+                        "for the canonical normalized snapshot",
+                        DeprecationWarning)
         return {"store": dict(self.store.stats), "cache": self.cache.stats,
                 "wire_traffic": self.wire_traffic()}
 
@@ -951,7 +1021,7 @@ class Session:
             sid: {"store": telemetry.normalize_store_stats(row["store"]),
                   "cache": row["cache"].as_dict(),
                   "wire_traffic": row["wire_traffic"]}
-            for sid, row in self.shard_stats().items()}
+            for sid, row in self._shard_rows().items()}
         return {"backend": self.backend.kind,
                 "store": telemetry.normalize_store_stats(self.store.stats),
                 "cache": self.cache.stats.as_dict(),
@@ -965,6 +1035,12 @@ class Session:
         counters, and accumulator wire traffic attributed to the shard owning
         each output ref.  Deprecated view — raw counter shapes; the
         normalized per-shard rows live in ``metrics()["shards"]``."""
+        _warn_at_caller("Session.shard_stats() is deprecated; use "
+                        "Session.metrics()['shards'] for the canonical "
+                        "normalized per-shard rows", DeprecationWarning)
+        return self._shard_rows()
+
+    def _shard_rows(self) -> Dict[int, Dict[str, Any]]:
         cache_rows = self.cache.shard_stats()
         out: Dict[int, Dict[str, Any]] = {
             sid: {"store": row, "cache": cache_rows.get(sid, CacheStats()),
@@ -988,7 +1064,15 @@ class Session:
 
     def _read(self, name: str):
         ctx = self._ctx()
-        return self.store.get(name) if ctx is None else ctx.read(name)
+        value = self.store.get(name) if ctx is None else ctx.read(name)
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled and (
+                ctx is None or type(ctx) is HostWorkerCtx):
+            # race detection sees host/driver accesses only: SPMD refs are
+            # traced replicated values (ordered by the collective schedule)
+            # and the lint dry run's shadow ctx must stay invisible
+            ck.on_access(name, "read", value)
+        return value
 
     def _write(self, name: str, value) -> None:
         ctx = self._ctx()
@@ -996,10 +1080,22 @@ class Session:
             self.store.set(name, value)
         else:
             ctx.write(name, value)
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled and (
+                ctx is None or type(ctx) is HostWorkerCtx):
+            ck.on_access(name, "write", value)
 
     def _inc(self, name: str, amount):
         ctx = self._ctx()
-        return self.store.inc(name, amount) if ctx is None else ctx.inc(name, amount)
+        result = (self.store.inc(name, amount) if ctx is None
+                  else ctx.inc(name, amount))
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled and (
+                ctx is None or type(ctx) is HostWorkerCtx):
+            # inc is atomic under the owning shard's lock: inc-inc pairs
+            # commute and are never racy; inc vs set/get still is
+            ck.on_access(name, "inc", result)
+        return result
 
     def _accumulate(self, name: str, local, mode, k):
         ctx = self._ctx()

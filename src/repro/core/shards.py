@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.check import checker as stepcheck
 from repro.core import telemetry
 from repro.core.addressing import (
     AddressAllocator,
@@ -201,6 +202,9 @@ class ShardedStore:
         # Disabled default + the module-level TRACING guard keep every store
         # op at one extra branch when nothing is armed.
         self.tracer = telemetry.NULL_TRACER
+        # step.check target: the lock-order sanitizer sees every shard/alloc
+        # acquisition through _lock_shard/_unlock_shard/_locked_alloc
+        self.checker = stepcheck.NULL_CHECKER
 
     # -- topology -------------------------------------------------------------
 
@@ -230,6 +234,28 @@ class ShardedStore:
                         shard=shard.id)
         else:
             shard.lock.acquire()
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            ck.lock_acquired(("shard", shard.id))
+
+    def _unlock_shard(self, shard: Shard) -> None:
+        shard.lock.release()
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            ck.lock_released(("shard", shard.id))
+
+    @contextmanager
+    def _locked_alloc(self):
+        with self._alloc_lock:
+            ck = self.checker
+            checking = stepcheck.CHECKING and ck.enabled
+            if checking:
+                ck.lock_acquired(("alloc", 0))
+            try:
+                yield
+            finally:
+                if checking:
+                    ck.lock_released(("alloc", 0))
 
     @contextmanager
     def locked_entry(self, name: str):
@@ -252,7 +278,7 @@ class ShardedStore:
                 if self._ring is ring:
                     raise KeyError(name)
             finally:
-                shard.lock.release()
+                self._unlock_shard(shard)
             # the ring moved under us — resolve the new owner and retry
 
     @contextmanager
@@ -268,7 +294,7 @@ class ShardedStore:
                     yield shard
                     return
             finally:
-                shard.lock.release()
+                self._unlock_shard(shard)
 
     # -- elastic rebalancing ---------------------------------------------------
 
@@ -308,8 +334,12 @@ class ShardedStore:
         old_ring = self._ring
         ids = sorted(set(old_ring.ids) | set(new_ring.ids))
         shards = [self._shards[i] for i in ids]
+        ck = self.checker
+        checking = stepcheck.CHECKING and ck.enabled
+        if checking:
+            ck.rebalance_begin()
         for s in shards:
-            s.lock.acquire()
+            self._lock_shard(s)
         try:
             moved: Dict[str, Tuple[int, int]] = {}
             epochs: Dict[str, int] = {}
@@ -348,7 +378,9 @@ class ShardedStore:
                                   total)
         finally:
             for s in reversed(shards):
-                s.lock.release()
+                self._unlock_shard(s)
+            if checking:
+                ck.rebalance_end()
 
     # -- store-side delete hooks (cache coherence teardown) --------------------
 
@@ -401,7 +433,7 @@ class ShardedStore:
     def def_global(self, name: str, value, *, spec: Optional[P] = None) -> str:
         """``DefGlobal(NAME, TYPE)`` — declare a shared variable and set it."""
         value = jnp.asarray(value)
-        with self._alloc_lock:
+        with self._locked_alloc():
             slot = self._alloc.alloc_field(
                 GLOBALS_OBJECT_ID, self._num_words(value.shape, value.dtype))
         placed = self._place(value, spec)
@@ -414,7 +446,7 @@ class ShardedStore:
 
     def new_array(self, name: str, shape, dtype=jnp.float32, *, spec: Optional[P] = None) -> str:
         """``NewArray<TYPE>(n)`` — allocate a zeroed shared array."""
-        with self._alloc_lock:
+        with self._locked_alloc():
             oid = self._alloc.new_object()
             slot = self._alloc.alloc_field(oid, self._num_words(shape, dtype))
         placed = self._place(jnp.zeros(shape, dtype), spec)
@@ -434,7 +466,7 @@ class ShardedStore:
             fval = jnp.asarray(fval)
             words += self._num_words(fval.shape, fval.dtype)
             placed[fname] = self._place(fval, specs.get(fname))
-        with self._alloc_lock:
+        with self._locked_alloc():
             oid = self._alloc.new_object()
             slot = self._alloc.alloc_field(oid, words)
         with self.locked_owner(name) as shard:
@@ -512,7 +544,8 @@ class ShardedStore:
         for sid, idxs in groups.items():
             shard = self._shards[sid]
             stragglers: List[int] = []
-            with shard.lock:
+            self._lock_shard(shard)
+            try:
                 got_bytes = 0
                 served = 0
                 for i in idxs:
@@ -527,6 +560,8 @@ class ShardedStore:
                     shard.stats["get"] += 1
                     shard.stats["transfers"] += 1
                     shard.stats["bytes_get"] += got_bytes
+            finally:
+                self._unlock_shard(shard)
             for i in stragglers:
                 vals[i] = self.get(names[i])
         if tracing:

@@ -19,6 +19,7 @@ import time
 from collections import deque
 from typing import Dict, Optional
 
+from repro.check import checker as stepcheck
 from repro.core import telemetry
 
 
@@ -37,8 +38,23 @@ class DBarrier:
         self._generation = 0
         self.entries = 0  # stats: total Enter calls observed by the controller
         self.tracer = telemetry.NULL_TRACER
+        self.checker = stepcheck.NULL_CHECKER
 
     def enter(self, timeout: Optional[float] = None) -> bool:
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            if ck.lint_sync(self, "barrier") is not None:
+                return True          # lint dry run: recorded, never blocks
+            ck.sync_block(self, "barrier")
+            ok = False
+            try:
+                ok = self._enter_traced(timeout)
+            finally:
+                ck.sync_unblock(self, "barrier", ok)
+            return ok
+        return self._enter_traced(timeout)
+
+    def _enter_traced(self, timeout: Optional[float] = None) -> bool:
         trc = self.tracer
         if telemetry.TRACING and trc.enabled:
             t0 = time.perf_counter()
@@ -80,8 +96,23 @@ class DSemaphore:
         self._queue: deque[int] = deque()
         self._ticket = 0
         self.tracer = telemetry.NULL_TRACER
+        self.checker = stepcheck.NULL_CHECKER
 
     def acquire(self, timeout: Optional[float] = None) -> bool:
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            if ck.lint_sync(self, "semaphore") is not None:
+                return True          # lint dry run: recorded, never blocks
+            ck.sync_block(self, "semaphore")
+            ok = False
+            try:
+                ok = self._acquire_traced(timeout)
+            finally:
+                ck.sync_unblock(self, "semaphore", ok)
+            return ok
+        return self._acquire_traced(timeout)
+
+    def _acquire_traced(self, timeout: Optional[float] = None) -> bool:
         trc = self.tracer
         if telemetry.TRACING and trc.enabled:
             t0 = time.perf_counter()
@@ -109,6 +140,11 @@ class DSemaphore:
             return True
 
     def release(self) -> None:
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            if ck.lint_sync(self, "semaphore") is not None:
+                return               # lint dry run: recorded, never mutates
+            ck.sem_release(self)     # publish the hand-off edge pre-release
         with self._cond:
             self._count += 1
             self._cond.notify_all()
@@ -134,14 +170,30 @@ class SSPClock:
         self._cond = threading.Condition()
         self.block_events = 0
         self.tracer = telemetry.NULL_TRACER
+        self.checker = stepcheck.NULL_CHECKER
 
     def tick(self, tid: int) -> int:
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            if ck.lint_sync(self, "ssp") is not None:
+                return self._clocks.get(tid, 0) + 1   # dry run: no mutation
+            ck.ssp_tick(self)        # publish the window edge pre-tick
         with self._cond:
             self._clocks[tid] += 1
             self._cond.notify_all()
             return self._clocks[tid]
 
     def wait(self, tid: int, timeout: Optional[float] = None) -> bool:
+        ck = self.checker
+        if stepcheck.CHECKING and ck.enabled:
+            if ck.lint_sync(self, "ssp") is not None:
+                return True          # lint dry run: recorded, never blocks
+            ok = self._wait(tid, timeout)
+            ck.ssp_wait_done(self, ok)
+            return ok
+        return self._wait(tid, timeout)
+
+    def _wait(self, tid: int, timeout: Optional[float] = None) -> bool:
         trc = self.tracer
         tracing = telemetry.TRACING and trc.enabled
         t0 = time.perf_counter() if tracing else 0.0

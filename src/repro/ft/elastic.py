@@ -130,12 +130,12 @@ def session_recovery(session, failed_nodes: Sequence[int], mode: str = "multi",
     if rebalance is True or (rebalance == "auto" and shards_follow_nodes):
         plan.migration = rebalance_shards(session.store, leave=failed_nodes)
     tpn = threads_per_node or pool.threads_per_node
-    # the replacement session adopts the dead session's tracer as-is, so an
-    # armed step.trace survives recovery (spans keep accumulating in the same
-    # timeline) and a disabled one stays disabled
+    # the replacement session adopts the dead session's tracer and checker
+    # as-is, so an armed step.trace/step.check survives recovery (spans and
+    # findings keep accumulating) and a disabled one stays disabled
     new_session = Session(backend=HostBackend(len(plan.new_world), tpn),
                           store=session.store, accum_mode=session.accum_mode,
-                          trace=session.tracer)
+                          trace=session.tracer, check=session.checker)
     return plan, new_session
 
 

@@ -30,6 +30,22 @@ def _tracer_leak_guard():
                     "included) before the test returns")
 
 
+@pytest.fixture(autouse=True)
+def _checker_leak_guard():
+    """Same contract for step.check: a leaked armed checker would tax (and
+    potentially fail, via strict lint) every later test."""
+    yield
+    stepcheck = sys.modules.get("repro.check.checker")
+    if stepcheck is None:
+        return
+    leaked = stepcheck.armed_count()
+    if leaked:
+        stepcheck.reset()
+        pytest.fail(f"test leaked {leaked} enabled checker(s): disable() or "
+                    "reset() checkers you arm (Session(check=True) checkers "
+                    "included) before the test returns")
+
+
 def run_subprocess_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
     """Run a code snippet in a fresh process with a forced host device count.
 

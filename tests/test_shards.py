@@ -181,7 +181,8 @@ def test_concurrent_cached_rw_mix_across_shards_is_coherent():
 
     assert sess.run(proc) == [True] * 4
     assert float(counter.get()) == 4 * 30
-    stats = sess.shard_stats()
+    with pytest.warns(DeprecationWarning, match="Session.shard_stats"):
+        stats = sess.shard_stats()
     assert set(stats) == set(sess.store.shard_ids())
     # the namespace genuinely spread: several shards saw traffic
     busy = [sid for sid, row in stats.items() if row["store"]["get"] > 0]
@@ -441,7 +442,8 @@ def test_shard_stats_attributes_wire_traffic_to_output_shard():
         return float(out.accumulate(jnp.ones(16))[0])
 
     assert sess.run(proc) == [4.0] * 4
-    stats = sess.shard_stats()
+    with pytest.warns(DeprecationWarning, match="Session.shard_stats"):
+        stats = sess.shard_stats()
     sid = out.shard
     assert stats[sid]["wire_traffic"] == (4 + 1) * 16 == sess.wire_traffic()
     assert sum(row["wire_traffic"] for row in stats.values()) == sess.wire_traffic()

@@ -166,3 +166,45 @@ def test_semaphore_timeout_mid_queue_preserves_fifo_order():
     s.release()
     [t.join(5) for t in threads]
     assert order == ["a", "b"]
+
+
+# -- negative timeout == block forever (paper-cased Enter/Acquire default) ----
+
+
+def test_barrier_enter_negative_timeout_blocks_until_release():
+    """``Enter(timeout=-1)`` (the paper's default) must block indefinitely —
+    not raise, not return False after 0 seconds — and release normally once
+    the arity is met."""
+    b = DBarrier(2)
+    state = {}
+
+    def waiter():
+        state["ok"] = b.Enter(-1)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.2)
+    assert t.is_alive()              # still parked: -1 never timed out
+    assert b.Enter(-1) is True       # second arrival releases both
+    t.join(5)
+    assert not t.is_alive() and state["ok"] is True
+    # the snake-cased API treats any negative the same way
+    b2 = DBarrier(1)
+    assert b2.enter(timeout=-3.5) is True
+
+
+def test_semaphore_acquire_negative_timeout_blocks_until_release():
+    s = DSemaphore(0)
+    state = {}
+
+    def waiter():
+        state["ok"] = s.Acquire(-1)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.2)
+    assert t.is_alive()              # parked forever, not timed out
+    s.release()
+    t.join(5)
+    assert not t.is_alive() and state["ok"] is True
+    assert s._count == 0             # the hand-off consumed the permit

@@ -255,7 +255,8 @@ def test_metric_key_sets_pinned():
         assert set(row["store"]) == set(STORE_METRIC_KEYS) | {"names"}
         assert set(row["cache"]) == set(CACHE_METRIC_KEYS)
     # canonical counters mirror the raw legacy ones
-    raw = sess.stats()
+    with pytest.warns(DeprecationWarning, match="Session.stats"):
+        raw = sess.stats()
     assert m["store"]["gets"] == raw["store"]["get"]
     assert m["store"]["bytes_written"] == raw["store"]["bytes_set"]
     assert m["cache"]["hits"] == raw["cache"].hits
@@ -263,10 +264,12 @@ def test_metric_key_sets_pinned():
 
 
 def test_deprecated_stats_shapes_unchanged():
-    """The three legacy shapes are frozen: old callers keep working."""
+    """The three legacy shapes are frozen: old callers keep working (they
+    just see a DeprecationWarning now — step.check PR)."""
     x, y = _logreg_data()
     theta, sess = logreg.fit(x, y, iters=2, n_nodes=2, threads_per_node=1)
-    raw = sess.stats()
+    with pytest.warns(DeprecationWarning, match="Session.stats"):
+        raw = sess.stats()
     assert set(raw) == {"store", "cache", "wire_traffic"}
     assert set(raw["store"]) == {"get", "set", "inc", "bytes_get", "bytes_set",
                                  "transfers", "migrated_in", "migrated_out"}
@@ -275,7 +278,9 @@ def test_deprecated_stats_shapes_unchanged():
                  "missing_messages", "evictions", "hit_rate"):
         assert hasattr(cs, attr)
     assert cs.as_dict()["hits"] == cs.hits
-    for sid, row in sess.shard_stats().items():
+    with pytest.warns(DeprecationWarning, match="Session.shard_stats"):
+        shard_rows = sess.shard_stats()
+    for sid, row in shard_rows.items():
         assert set(row) == {"store", "cache", "wire_traffic"}
         assert "get" in row["store"] and "names" in row["store"]
 
