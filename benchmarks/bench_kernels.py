@@ -4,8 +4,20 @@ On CPU, interpret-mode kernels are expected to be SLOWER than the fused jnp
 oracle — the numbers here are correctness/overhead tracking, not TPU perf;
 the TPU target engages via Mosaic on real hardware.  Derived column carries
 the oracle time for the ratio.
+
+Three hot-path sweeps additionally land in ``benchmarks/BENCH_kernels.json``:
+
+* ``fused_density_sweep`` — the accumulator round at the bench shape
+  (N=4, V=16384, k=512): one fused sparsify→scatter-add launch vs the
+  historical compress→densify→add chain vs the jnp reference, across the
+  same nnz densities as BENCH_accumulator.json;
+* ``topk_methods`` — bitonic partial sort vs the k×(argmax→mask) loop in
+  ``topk_compress`` over k_per_block ∈ {16, 64, 256};
+* ``owner_memo`` — ``store.get`` with a pre-resolved :class:`OwnerHandle`
+  vs re-hashing the ring on every call (S=8).
 """
 
+import json
 import os
 import sys
 
@@ -16,6 +28,92 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
+
+RESULTS = {}
+
+
+def fused_density_sweep():
+    """Fused one-launch accumulate vs compress→densify→add, per density."""
+    from repro.core.sparse import DEFAULT_BLOCK, blocked_topk_accumulate
+    N, V, k = 4, 1 << 14, 512
+    rng = np.random.default_rng(0)
+    sweep = {"shape": {"n": N, "v": V, "k": k, "block": DEFAULT_BLOCK}}
+    for density in (0.001, 0.01, 0.03, 0.25, 1.0):
+        mat = rng.normal(size=(N, V)).astype(np.float32)
+        mat[rng.random((N, V)) >= density] = 0.0
+        mat = jnp.asarray(mat)
+        us_fused = timeit(lambda: jax.block_until_ready(
+            blocked_topk_accumulate(mat, k, fused=True, impl="pallas")),
+            warmup=2, iters=5)
+        us_unfused = timeit(lambda: jax.block_until_ready(
+            blocked_topk_accumulate(mat, k, fused=False)),
+            warmup=2, iters=5)
+        us_jnp = timeit(lambda: jax.block_until_ready(
+            blocked_topk_accumulate(mat, k, fused=True, impl="jnp")),
+            warmup=2, iters=5)
+        speedup = us_unfused / max(us_fused, 1e-9)
+        sweep[str(density)] = {"fused_us": us_fused, "unfused_us": us_unfused,
+                               "jnp_us": us_jnp,
+                               "speedup_fused_over_unfused": speedup}
+        emit(f"fused_accum_density{density}", us_fused,
+             f"unfused_us={us_unfused:.0f};jnp_us={us_jnp:.0f};"
+             f"speedup={speedup:.2f}x")
+    speeds = [row["speedup_fused_over_unfused"]
+              for key, row in sweep.items() if key != "shape"]
+    sweep["min_speedup"] = min(speeds)
+    emit("fused_accum_min_speedup", 0.0, f"{sweep['min_speedup']:.2f}x")
+    RESULTS["fused_density_sweep"] = sweep
+
+
+def topk_methods_sweep():
+    """Bitonic partial sort vs the argmax loop, k_per_block ∈ {16, 64, 256}."""
+    from repro.kernels.topk_compress.ops import topk_compress
+    V, block_v = 1 << 14, 1024
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(V,)), jnp.float32)
+    sweep = {"shape": {"v": V, "block_v": block_v}}
+    for k in (16, 64, 256):
+        row = {}
+        for method in ("argmax", "bitonic"):
+            us = timeit(lambda: jax.block_until_ready(tuple(
+                topk_compress(x, k_per_block=k, block_v=block_v,
+                              method=method))), warmup=2, iters=5)
+            row[f"{method}_us"] = us
+        row["speedup_bitonic_over_argmax"] = (row["argmax_us"]
+                                              / max(row["bitonic_us"], 1e-9))
+        sweep[f"k{k}"] = row
+        emit(f"topk_k{k}_bitonic", row["bitonic_us"],
+             f"argmax_us={row['argmax_us']:.0f};"
+             f"speedup={row['speedup_bitonic_over_argmax']:.2f}x")
+    RESULTS["topk_methods"] = sweep
+
+
+def owner_memo_bench():
+    """store.get with a pre-resolved OwnerHandle vs re-hashing every call."""
+    from repro.core import GlobalStore
+    n_names, iters = 64, 50
+    store = GlobalStore(shards=8)
+    names = [f"v{i}" for i in range(n_names)]
+    for n in names:
+        store.def_global(n, float(len(n)))
+    handles = {n: store.owner_handle(n) for n in names}
+
+    def hashed():
+        for n in names:
+            store.get(n)
+
+    def memoized():
+        for n in names:
+            store.get(n, owner=handles[n])
+
+    us_hash = timeit(hashed, warmup=2, iters=iters)
+    us_memo = timeit(memoized, warmup=2, iters=iters)
+    speedup = us_hash / max(us_memo, 1e-9)
+    RESULTS["owner_memo"] = {"shards": 8, "names": n_names,
+                             "hashed_us": us_hash, "memoized_us": us_memo,
+                             "speedup_memo_over_hash": speedup}
+    emit("owner_memo_get", us_memo,
+         f"hashed_us={us_hash:.1f};speedup={speedup:.2f}x")
 
 
 def main():
@@ -68,6 +166,15 @@ def main():
     refj = jax.jit(lambda *a: ssd_chunked(*a, chunk=64)[0])
     us_r = timeit(lambda: jax.block_until_ready(refj(xs, dt, A_log, B, C)), iters=3)
     emit("kernel_ssd_scan", us_k, f"oracle_us={us_r:.0f}")
+
+    fused_density_sweep()
+    topk_methods_sweep()
+    owner_memo_bench()
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "BENCH_kernels.json")
+    with open(out, "w") as f:
+        json.dump(RESULTS, f, indent=2)
+    print(f"# wrote {out}", flush=True)
 
 
 if __name__ == "__main__":

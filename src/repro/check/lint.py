@@ -102,15 +102,15 @@ class LintCtx:
         finally:
             self._repeat = outer
 
-    # -- shadow transport ----------------------------------------------------
+    # -- shadow transport (owner handles have nothing to shortcut here) ------
 
-    def read(self, name: str):
+    def read(self, name: str, owner=None):
         return self.values[name]
 
-    def write(self, name: str, value) -> None:
+    def write(self, name: str, value, owner=None) -> None:
         self.values[name] = value
 
-    def inc(self, name: str, amount):
+    def inc(self, name: str, amount, owner=None):
         self.values[name] = self.values[name] + amount
         return self.values[name]
 

@@ -23,8 +23,15 @@ from repro.core.cache import DSMCache, CacheStats
 from repro.core.compat import axis_size, cost_analysis, make_mesh, shard_map
 from repro.core.dsm import GlobalStore, PackSpec, pack_spec, pack_tree, unpack_tree
 from repro.core.session import Backend, HostBackend, Session, SharedRef, SpmdBackend, WorkerCtx
-from repro.core.shards import HashRing, Shard, ShardedStore, ShardMigration
-from repro.core.sparse import blocked_topk_sparsify, densify, sparse_beneficial, sparse_beneficial_batch, topk_sparsify
+from repro.core.shards import HashRing, OwnerHandle, Shard, ShardedStore, ShardMigration
+from repro.core.sparse import (
+    blocked_topk_accumulate,
+    blocked_topk_sparsify,
+    densify,
+    sparse_beneficial,
+    sparse_beneficial_batch,
+    topk_sparsify,
+)
 from repro.core.sync import DBarrier, DSemaphore, SSPClock
 from repro.core.telemetry import NULL_TRACER, Tracer, as_tracer
 from repro.core.threads import DThread, DThreadPool, ThreadState, spmd_threads
@@ -36,8 +43,9 @@ __all__ = [
     "axis_size", "cost_analysis", "make_mesh", "shard_map",
     "GlobalStore", "PackSpec", "pack_spec", "pack_tree", "unpack_tree",
     "Backend", "HostBackend", "Session", "SharedRef", "SpmdBackend", "WorkerCtx",
-    "HashRing", "Shard", "ShardedStore", "ShardMigration",
-    "blocked_topk_sparsify", "densify", "sparse_beneficial", "sparse_beneficial_batch", "topk_sparsify",
+    "HashRing", "OwnerHandle", "Shard", "ShardedStore", "ShardMigration",
+    "blocked_topk_accumulate", "blocked_topk_sparsify", "densify",
+    "sparse_beneficial", "sparse_beneficial_batch", "topk_sparsify",
     "DBarrier", "DSemaphore", "SSPClock",
     "telemetry", "Tracer", "NULL_TRACER", "as_tracer",
     "DThread", "DThreadPool", "ThreadState", "spmd_threads",

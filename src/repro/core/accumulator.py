@@ -49,9 +49,11 @@ from repro.core.addressing import align_up
 from repro.core.compat import axis_size as compat_axis_size
 from repro.core.sparse import (
     DEFAULT_BLOCK,
+    blocked_topk_accumulate,
     blocked_topk_sparsify,
     default_auto_k,
     densify,
+    pair_capacity,
     sparse_beneficial,
     sparse_beneficial_batch,
 )
@@ -204,7 +206,7 @@ class DAddAccumulator:
     def __init__(self, store, output_name: str, n_threads: int, n_nodes: int,
                  mode: AccumMode | str = AccumMode.REDUCE_SCATTER, *,
                  k: Optional[int] = None, block: int = DEFAULT_BLOCK,
-                 tracer=None, checker=None):
+                 fused: bool = True, tracer=None, checker=None):
         self.store = store
         self.tracer = tracer if tracer is not None else telemetry.NULL_TRACER
         self.checker = checker if checker is not None else stepcheck.NULL_CHECKER
@@ -216,6 +218,11 @@ class DAddAccumulator:
             raise ValueError("sparse mode needs a top-k budget k")
         self.k = k                  # AUTO with k=None defaults per round (~V/4)
         self.block = block
+        # fused=True applies SPARSE/AUTO pairs rounds as one sparsify→
+        # scatter-add kernel launch (bit-exact, same wire accounting);
+        # fused=False keeps the historical compress→densify→add path
+        self.fused = fused
+        self._owner = None          # memoised (ring_version, shard) of output
         self._lock = threading.Lock()
         self._vecs: list = []           # buffered contributions (SPARSE/AUTO)
         self._partial = None            # running sum (fixed dense modes)
@@ -282,18 +289,31 @@ class DAddAccumulator:
                 mode = AccumMode.SPARSE if all_ok else AccumMode.REDUCE_SCATTER
             if mode == AccumMode.SPARSE:
                 tc = time.perf_counter() if tracing else 0.0
-                pairs = [blocked_topk_sparsify(f, k, self.block) for f in flats]
+                if self.fused:
+                    # one fused sparsify→scatter-add launch over the stacked
+                    # round — no pair arrays or dense intermediates; the
+                    # logical pair count is the static capacity either way
+                    # (under jit num_pairs always equals pair_capacity), so
+                    # wire accounting is unchanged
+                    total = blocked_topk_accumulate(
+                        jnp.stack(flats), k, self.block).reshape(shape)
+                    self.last_pair_counts = (
+                        [pair_capacity(vec_len, k, self.block)] * self.n)
+                else:
+                    pairs = [blocked_topk_sparsify(f, k, self.block)
+                             for f in flats]
+                    # one scatter-add over the concatenated pair arrays — the
+                    # same "densify everything at once" the SPMD all-gather
+                    # path does
+                    total = densify(jnp.concatenate([p.idx for p in pairs]),
+                                    jnp.concatenate([p.vals for p in pairs]),
+                                    vec_len).reshape(shape)
+                    self.last_pair_counts = [p.num_pairs for p in pairs]
                 if tracing:
                     trc.observe("accumulate.compress",
                                 (time.perf_counter() - tc) * 1e6)
-                # one scatter-add over the concatenated pair arrays — the same
-                # "densify everything at once" the SPMD all-gather path does
-                total = densify(jnp.concatenate([p.idx for p in pairs]),
-                                jnp.concatenate([p.vals for p in pairs]),
-                                vec_len).reshape(shape)
-                self.last_pair_counts = [p.num_pairs for p in pairs]
                 self.bytes_transferred += (
-                    sum(p.wire_elements for p in pairs) + vec_len)
+                    sum(2 * c for c in self.last_pair_counts) + vec_len)
             else:
                 total = flats[0]
                 for f in flats[1:]:
@@ -302,9 +322,14 @@ class DAddAccumulator:
                 self.last_pair_counts = []
                 self._account_dense(vec_len)
         self.last_mode = mode
-        self.store.set(self.output_name, total)
+        self._store_output(total)
         self.rounds += 1
         if tracing:
+            if mode == AccumMode.SPARSE:
+                path = "fused" if self.fused else "sparse"
+            else:
+                path = "dense"
+            trc.count(f"accum.kernel_path.{path}")
             trc.count("accumulate.rounds")
             trc.count("accumulate.wire_elements",
                       self.bytes_transferred - wire_before)
@@ -316,6 +341,23 @@ class DAddAccumulator:
                           "wire_elements":
                               self.bytes_transferred - wire_before})
         self._reset_round()
+
+    def _store_output(self, total) -> None:
+        """Publish the round sum, with the output's owner shard memoised.
+
+        The output name never changes, so its ring owner is stable between
+        rebalances — pass the cached :class:`~repro.core.shards.OwnerHandle`
+        to skip the blake2b + bisect on every round (refreshed lazily when
+        ``add_shard``/``remove_shard`` bumps the ring version)."""
+        store = self.store
+        if hasattr(store, "owner_handle"):
+            handle = self._owner
+            if handle is None or handle.version != store.ring_version:
+                handle = store.owner_handle(self.output_name)
+                self._owner = handle
+            store.set(self.output_name, total, owner=handle)
+        else:
+            store.set(self.output_name, total)
 
     def accumulate(self, local_vec) -> None:
         """Paper's ``Accumulate`` — synchronization point across all N threads.

@@ -238,12 +238,12 @@ class DSMCache:
 
     # -- reads ---------------------------------------------------------------
 
-    def read(self, node_id: int, name: str):
+    def read(self, node_id: int, name: str, *, owner=None):
         evicted = None
         trc = self.tracer
         tracing = telemetry.TRACING and trc.enabled
         try:
-            with self.store.locked_entry(name) as (shard, entry):
+            with self.store.locked_entry(name, owner) as (shard, entry):
                 stats = self._shard_stats(shard.id)
                 cached = self.caches[node_id].get(name)
                 if cached is not None and cached[0] == entry.epoch:
@@ -256,7 +256,9 @@ class DSMCache:
                 stats.missing_messages += 1
                 if tracing:
                     trc.count("cache.replica_misses")
-                value = self.store.get(name)   # re-entrant on the held shard lock
+                # re-entrant on the held shard lock; the handle spares the
+                # nested op its second ring_hash of the same name
+                value = self.store.get(name, owner=owner)
                 evicted = self.caches[node_id].put(name, entry.epoch, value)
                 shard.directory.setdefault(name, set()).add(node_id)
                 return value
@@ -268,12 +270,12 @@ class DSMCache:
 
     # -- writes (write-through + invalidate) ----------------------------------
 
-    def write(self, node_id: int, name: str, value) -> None:
+    def write(self, node_id: int, name: str, value, *, owner=None) -> None:
         evicted = None
         try:
-            with self.store.locked_entry(name) as (shard, entry):
+            with self.store.locked_entry(name, owner) as (shard, entry):
                 stats = self._shard_stats(shard.id)
-                self.store.set(name, value)                    # write-through
+                self.store.set(name, value, owner=owner)       # write-through
                 stats.write_messages += 1
                 holders = shard.directory.get(name, set())
                 for holder in list(holders):
@@ -297,8 +299,8 @@ class DSMCache:
 
     # -- bypass (atomic ops skip the cache, per §5.1) --------------------------
 
-    def atomic_inc(self, name: str, amount=1):
-        val = self.store.inc(name, amount)
+    def atomic_inc(self, name: str, amount=1, *, owner=None):
+        val = self.store.inc(name, amount, owner=owner)
         # epoch bump means every cached replica is now stale; lazily invalid.
         return val
 

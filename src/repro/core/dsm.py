@@ -42,6 +42,7 @@ from repro.core.addressing import TPU_PACKAGE_ELEMS, align_up
 from repro.core.shards import (  # noqa: F401  (re-exported, public surface)
     GlobalEntry,
     HashRing,
+    OwnerHandle,
     Shard,
     ShardedStore,
     ShardMigration,

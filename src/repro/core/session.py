@@ -87,21 +87,37 @@ class SharedRef:
     under SPMD).
     """
 
-    __slots__ = ("_session", "name")
+    __slots__ = ("_session", "name", "_hcache")
 
     def __init__(self, session: "Session", name: str):
         self._session = session
         self.name = name
+        self._hcache = None  # memoised OwnerHandle, refreshed on ring bumps
+
+    def _owner(self):
+        """This name's memoised :class:`~repro.core.shards.OwnerHandle`.
+
+        Resolved lazily and refreshed (by atomic reference swap — handles are
+        immutable, so concurrent readers see either the old or the new handle,
+        never a torn one) whenever ``add_shard``/``remove_shard`` bumped the
+        ring version.  Every hot ``get``/``set``/``inc`` through this ref then
+        skips the per-op blake2b + bisect in the store."""
+        store = self._session.store
+        handle = self._hcache
+        if handle is None or handle.version != store.ring_version:
+            handle = store.owner_handle(self.name)
+            self._hcache = handle
+        return handle
 
     def get(self):
         """``Get`` — current value (cache-validated inside host workers)."""
-        return self._session._read(self.name)
+        return self._session._read(self.name, owner=self._owner())
 
     def set(self, value) -> None:
         """``Set`` — write-through + invalidate.  Inside a worker this is the
         bulk-synchronous collective write: every thread passes the identical
         re-derived value."""
-        self._session._write(self.name, value)
+        self._session._write(self.name, value, owner=self._owner())
 
     def inc(self, amount=1):
         """``Inc`` — atomic increment; bypasses the cache layer (§5.1).
@@ -111,7 +127,7 @@ class SharedRef:
         the host returns each thread's own post-increment snapshot (atomic
         RMW order), SPMD returns the replicated round total — treat the
         return as "some current value", not a unique ticket."""
-        return self._session._inc(self.name, amount)
+        return self._session._inc(self.name, amount, owner=self._owner())
 
     def accumulate(self, local, *, mode: Optional[AccumMode | str] = None,
                    k: Optional[int] = None):
@@ -207,15 +223,16 @@ class WorkerCtx:
         """Indexed variant: ``carry = step(i, carry)`` for i in [0, iters)."""
         raise NotImplementedError
 
-    # -- ref-op routing (transport is backend-specific) ----------------------
+    # -- ref-op routing (transport is backend-specific; `owner` is the ref's
+    # memoised OwnerHandle, meaningful only on store-backed transports) -------
 
-    def read(self, name: str):
+    def read(self, name: str, owner=None):
         raise NotImplementedError
 
-    def write(self, name: str, value) -> None:
+    def write(self, name: str, value, owner=None) -> None:
         raise NotImplementedError
 
-    def inc(self, name: str, amount):
+    def inc(self, name: str, amount, owner=None):
         raise NotImplementedError
 
     def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
@@ -254,16 +271,16 @@ class HostWorkerCtx(WorkerCtx):
 
     # -- ref-op routing ------------------------------------------------------
 
-    def read(self, name: str):
-        return self._session._cached_read(self.node_id, name)
+    def read(self, name: str, owner=None):
+        return self._session._cached_read(self.node_id, name, owner=owner)
 
-    def write(self, name: str, value) -> None:
-        self._session._cached_write(self.node_id, name, value)
+    def write(self, name: str, value, owner=None) -> None:
+        self._session._cached_write(self.node_id, name, value, owner=owner)
 
-    def inc(self, name: str, amount):
+    def inc(self, name: str, amount, owner=None):
         # atomicity comes from the owning shard's lock inside store.inc —
         # increments to names on different shards proceed concurrently
-        return self._session.cache.atomic_inc(name, amount)
+        return self._session.cache.atomic_inc(name, amount, owner=owner)
 
     def accumulate(self, name: str, local, mode: AccumMode, k: Optional[int]):
         accu = self._backend.accumulator(self._session, name, mode, k)
@@ -336,15 +353,16 @@ class SpmdWorkerCtx(WorkerCtx):
         self.values.update(values)
         return carry
 
-    # -- ref-op routing ------------------------------------------------------
+    # -- ref-op routing (replicated traced values: `owner` has no transport
+    # to shortcut and is ignored) --------------------------------------------
 
-    def read(self, name: str):
+    def read(self, name: str, owner=None):
         return self.values[name]
 
-    def write(self, name: str, value) -> None:
+    def write(self, name: str, value, owner=None) -> None:
         self.values[name] = jax.tree.map(jnp.asarray, value)
 
-    def inc(self, name: str, amount):
+    def inc(self, name: str, amount, owner=None):
         # `Inc` is per-thread: N threads calling inc(a) must advance the value
         # by N·a, exactly as N atomic increments do on the host backend.  The
         # replicated value is written once per trace, so the per-thread amounts
@@ -426,9 +444,14 @@ class HostBackend:
 
     kind = "host"
 
-    def __init__(self, n_nodes: int = 2, threads_per_node: int = 2):
+    def __init__(self, n_nodes: int = 2, threads_per_node: int = 2, *,
+                 fused: bool = True):
         self.pool = DThreadPool(n_nodes, threads_per_node)
         self.run_barrier = DBarrier(self.pool.n_threads)
+        # SPARSE/AUTO rounds reduce through the fused sparsify→scatter-add
+        # kernel; set False to route new accumulators down the historical
+        # compress→densify→add path (bit-exact either way)
+        self.fused = fused
         self._accumulators: Dict[tuple, DAddAccumulator] = {}
         self._lock = threading.Lock()
 
@@ -473,6 +496,7 @@ class HostBackend:
             if accu is None:
                 accu = DAddAccumulator(session.store, name, self.n_threads,
                                        self.n_nodes, mode, k=k,
+                                       fused=self.fused,
                                        tracer=session.tracer,
                                        checker=session.checker)
                 self._accumulators[key] = accu
@@ -1062,9 +1086,10 @@ class Session:
     def _ctx(self):
         return getattr(self._tls, "ctx", None)
 
-    def _read(self, name: str):
+    def _read(self, name: str, owner=None):
         ctx = self._ctx()
-        value = self.store.get(name) if ctx is None else ctx.read(name)
+        value = (self.store.get(name, owner=owner) if ctx is None
+                 else ctx.read(name, owner=owner))
         ck = self.checker
         if stepcheck.CHECKING and ck.enabled and (
                 ctx is None or type(ctx) is HostWorkerCtx):
@@ -1074,21 +1099,21 @@ class Session:
             ck.on_access(name, "read", value)
         return value
 
-    def _write(self, name: str, value) -> None:
+    def _write(self, name: str, value, owner=None) -> None:
         ctx = self._ctx()
         if ctx is None:
-            self.store.set(name, value)
+            self.store.set(name, value, owner=owner)
         else:
-            ctx.write(name, value)
+            ctx.write(name, value, owner=owner)
         ck = self.checker
         if stepcheck.CHECKING and ck.enabled and (
                 ctx is None or type(ctx) is HostWorkerCtx):
             ck.on_access(name, "write", value)
 
-    def _inc(self, name: str, amount):
+    def _inc(self, name: str, amount, owner=None):
         ctx = self._ctx()
-        result = (self.store.inc(name, amount) if ctx is None
-                  else ctx.inc(name, amount))
+        result = (self.store.inc(name, amount, owner=owner) if ctx is None
+                  else ctx.inc(name, amount, owner=owner))
         ck = self.checker
         if stepcheck.CHECKING and ck.enabled and (
                 ctx is None or type(ctx) is HostWorkerCtx):
@@ -1108,14 +1133,14 @@ class Session:
         return ctx.accumulate(name, jnp.asarray(local),
                               AccumMode(mode) if mode is not None else self.accum_mode, k)
 
-    def _cached_read(self, node_id: int, name: str):
+    def _cached_read(self, node_id: int, name: str, owner=None):
         # locking lives in the cache/store layer: the owning shard's lock,
         # not a session-global one — reads of names on different shards
         # proceed concurrently
-        return self.cache.read(node_id, name)
+        return self.cache.read(node_id, name, owner=owner)
 
-    def _cached_write(self, node_id: int, name: str, value) -> None:
-        self.cache.write(node_id, name, value)
+    def _cached_write(self, node_id: int, name: str, value, owner=None) -> None:
+        self.cache.write(node_id, name, value, owner=owner)
 
     # paper-cased aliases (Table 1)
     DefGlobal = def_global

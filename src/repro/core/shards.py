@@ -92,16 +92,19 @@ class HashRing:
     swapping one reference.
     """
 
-    __slots__ = ("ids", "vnodes", "_keys", "_owners")
+    __slots__ = ("ids", "vnodes", "version", "_keys", "_owners")
 
-    def __init__(self, shard_ids, vnodes: int = DEFAULT_VNODES):
+    def __init__(self, shard_ids, vnodes: int = DEFAULT_VNODES,
+                 version: int = 0):
         ids = tuple(sorted(set(int(i) for i in shard_ids)))
-        if not ids:
-            raise ValueError("a hash ring needs at least one shard")
         if vnodes < 1:
             raise ValueError(f"vnodes must be >= 1, got {vnodes}")
         self.ids = ids
         self.vnodes = int(vnodes)
+        # Monotonic topology epoch, carried ON the ring so one atomic
+        # reference read yields a consistent (arcs, version) pair — memoised
+        # OwnerHandles compare against it to detect rebalances.
+        self.version = int(version)
         points = sorted((ring_hash(f"shard:{sid}#vnode:{v}"), sid)
                         for sid in ids for v in range(self.vnodes))
         self._keys = [h for h, _ in points]
@@ -109,20 +112,53 @@ class HashRing:
 
     def owner(self, key) -> int:
         """Shard id owning ``key`` (a DSM name, or any hashable address)."""
+        if not self._keys:
+            # an empty ring is a legal value object (removed() of the last
+            # shard), but it owns nothing — without this guard the modulo
+            # below raises a bare ZeroDivisionError
+            raise ValueError(
+                "cannot resolve an owner on an empty hash ring — all shards "
+                "have been removed")
         i = bisect.bisect_right(self._keys, ring_hash(key)) % len(self._keys)
         return self._owners[i]
 
     def added(self, shard_id: int) -> "HashRing":
-        return HashRing(self.ids + (shard_id,), self.vnodes)
+        return HashRing(self.ids + (shard_id,), self.vnodes, self.version + 1)
 
     def removed(self, shard_id: int) -> "HashRing":
-        return HashRing(tuple(i for i in self.ids if i != shard_id), self.vnodes)
+        return HashRing(tuple(i for i in self.ids if i != shard_id),
+                        self.vnodes, self.version + 1)
 
     def __len__(self) -> int:
         return len(self.ids)
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
-        return f"HashRing(ids={self.ids}, vnodes={self.vnodes})"
+        return (f"HashRing(ids={self.ids}, vnodes={self.vnodes}, "
+                f"version={self.version})")
+
+
+class OwnerHandle:
+    """Memoised (ring version, shard id) owner resolution of one name.
+
+    Hot-path store ops pay a blake2b hash + bisect per call just to find the
+    owning shard; a holder that touches the same name repeatedly (a
+    ``SharedRef``, an accumulator's output) can resolve once and pass the
+    handle back in.  Immutable by contract: a stale handle is never repaired
+    in place (a torn two-field write could route a concurrent reader to the
+    wrong shard *with* a matching version) — holders compare ``version``
+    against :attr:`ShardedStore.ring_version` and atomically swap in a fresh
+    handle from :meth:`ShardedStore.owner_handle`.  A stale handle passed to
+    a store op is simply ignored (the op re-hashes), so lazy refresh is safe.
+    """
+
+    __slots__ = ("version", "shard")
+
+    def __init__(self, version: int, shard: int):
+        self.version = int(version)
+        self.shard = int(shard)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"OwnerHandle(version={self.version}, shard={self.shard})"
 
 
 def _fresh_stats() -> Dict[str, int]:
@@ -223,6 +259,32 @@ class ShardedStore:
         """Owning :class:`Shard` handle of ``name`` (lock NOT held)."""
         return self._shards[self._ring.owner(name)]
 
+    @property
+    def ring_version(self) -> int:
+        """Topology epoch of the current ring — bumped by every
+        ``add_shard``/``remove_shard``; :class:`OwnerHandle` holders compare
+        against it to detect staleness."""
+        return self._ring.version
+
+    def owner_handle(self, name: str) -> OwnerHandle:
+        """Resolve ``name``'s owner once and return the memoisable handle.
+
+        Pass it back as the ``owner=`` argument of ``get``/``set``/``inc``
+        (or ``owners=`` of ``mget``) to skip the per-op hash + bisect while
+        the ring topology is unchanged."""
+        ring = self._ring
+        return OwnerHandle(ring.version, ring.owner(name))
+
+    def _resolve_owner(self, ring: HashRing, name: str,
+                       owner: Optional[OwnerHandle]) -> int:
+        """Owning shard id under ``ring``, via the handle when still valid."""
+        if owner is not None and owner.version == ring.version:
+            trc = self.tracer
+            if telemetry.TRACING and trc.enabled:
+                trc.count("store.owner_cache_hit")
+            return owner.shard
+        return ring.owner(name)
+
     def _lock_shard(self, shard: Shard) -> None:
         """Acquire a shard's lock, recording the wait when tracing is armed
         (the per-shard contention signal the ROADMAP's overlap work needs)."""
@@ -258,17 +320,19 @@ class ShardedStore:
                     ck.lock_released(("alloc", 0))
 
     @contextmanager
-    def locked_entry(self, name: str):
+    def locked_entry(self, name: str, owner: Optional[OwnerHandle] = None):
         """Yield ``(shard, entry)`` with the owning shard's lock held.
 
         Lock-free ring snapshot + validate-after-lock: if a rebalance moved
         the name between the snapshot and the lock, retry against the new
         ring.  A missing name under a *current* ring is a ``KeyError`` —
-        the same contract the flat dict had.
+        the same contract the flat dict had.  ``owner`` is an optional
+        :class:`OwnerHandle` *for this name*: when its version matches the
+        snapshot it replaces the hash + bisect; otherwise it is ignored.
         """
         while True:
             ring = self._ring
-            shard = self._shards[ring.owner(name)]
+            shard = self._shards[self._resolve_owner(ring, name, owner)]
             self._lock_shard(shard)
             try:
                 entry = shard.entries.get(name)
@@ -282,12 +346,12 @@ class ShardedStore:
             # the ring moved under us — resolve the new owner and retry
 
     @contextmanager
-    def locked_owner(self, name: str):
+    def locked_owner(self, name: str, owner: Optional[OwnerHandle] = None):
         """Like :meth:`locked_entry` but for declarations: the name need not
         exist, only the ring snapshot must still be current once locked."""
         while True:
             ring = self._ring
-            shard = self._shards[ring.owner(name)]
+            shard = self._shards[self._resolve_owner(ring, name, owner)]
             self._lock_shard(shard)
             try:
                 if self._ring is ring:
@@ -493,11 +557,11 @@ class ShardedStore:
             return value
         return jax.device_put(value, self._sharding(spec))
 
-    def get(self, name: str):
+    def get(self, name: str, *, owner: Optional[OwnerHandle] = None):
         trc = self.tracer
         tracing = telemetry.TRACING and trc.enabled
         t0 = time.perf_counter() if tracing else 0.0
-        with self.locked_entry(name) as (shard, e):
+        with self.locked_entry(name, owner) as (shard, e):
             shard.stats["get"] += 1
             shard.stats["bytes_get"] += _nbytes(e.value)
             shard.stats["transfers"] += self._transfer_count(e.value)
@@ -506,11 +570,12 @@ class ShardedStore:
             trc.store_op("get", sid, t0, name=name)
         return value
 
-    def set(self, name: str, value, *, bump_epoch: bool = True) -> None:
+    def set(self, name: str, value, *, bump_epoch: bool = True,
+            owner: Optional[OwnerHandle] = None) -> None:
         trc = self.tracer
         tracing = telemetry.TRACING and trc.enabled
         t0 = time.perf_counter() if tracing else 0.0
-        with self.locked_entry(name) as (shard, e):
+        with self.locked_entry(name, owner) as (shard, e):
             if isinstance(e.value, dict):
                 specs = e.field_specs or {}
                 e.value = {k: self._place(jnp.asarray(v), specs.get(k))
@@ -529,18 +594,29 @@ class ShardedStore:
         if tracing:
             trc.store_op("set", sid, t0, name=name)
 
-    def mget(self, names) -> list:
+    def mget(self, names, *, owners=None) -> list:
         """``MGet`` — batched get, one logical round trip *per shard touched*
-        (names are grouped by owner, each group read under one lock hold)."""
+        (names are grouped by owner, each group read under one lock hold).
+
+        ``owners`` is an optional sequence of :class:`OwnerHandle` (or None)
+        aligned with ``names``; current handles skip that name's hash+bisect.
+        """
         trc = self.tracer
         tracing = telemetry.TRACING and trc.enabled
         t0 = time.perf_counter() if tracing else 0.0
         names = list(names)
+        if owners is not None:
+            owners = list(owners)
+            if len(owners) != len(names):
+                raise ValueError(
+                    f"owners must align with names: got {len(owners)} handles "
+                    f"for {len(names)} names")
         vals: list = [None] * len(names)
         ring = self._ring
         groups: Dict[int, List[int]] = {}
         for i, n in enumerate(names):
-            groups.setdefault(ring.owner(n), []).append(i)
+            h = owners[i] if owners is not None else None
+            groups.setdefault(self._resolve_owner(ring, n, h), []).append(i)
         for sid, idxs in groups.items():
             shard = self._shards[sid]
             stragglers: List[int] = []
@@ -571,7 +647,7 @@ class ShardedStore:
             trc.observe("store.mget", (t1 - t0) * 1e6)
         return vals
 
-    def inc(self, name: str, amount=1):
+    def inc(self, name: str, amount=1, *, owner: Optional[OwnerHandle] = None):
         """Atomic increment (Table 1) — skips the cache layer by contract.
 
         Serialised under the *owning shard's* lock (increments to names on
@@ -581,7 +657,7 @@ class ShardedStore:
         trc = self.tracer
         tracing = telemetry.TRACING and trc.enabled
         t0 = time.perf_counter() if tracing else 0.0
-        with self.locked_entry(name) as (shard, e):
+        with self.locked_entry(name, owner) as (shard, e):
             e.value = self._place(jnp.asarray(e.value) + amount, e.spec)
             e.epoch += 1
             shard.stats["inc"] += 1

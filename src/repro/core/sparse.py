@@ -176,6 +176,63 @@ def densify(idx: jax.Array, vals: jax.Array, n: int) -> jax.Array:
     return jnp.zeros((n,), vals.dtype).at[idx.reshape(-1)].add(vals.reshape(-1))
 
 
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def _fused_accumulate_jnp(mat: jax.Array, nblocks: int, block_eff: int,
+                          per_block: int) -> jax.Array:
+    """jnp reference for the fused kernel: same selection + fold schedule."""
+    n, v = mat.shape
+    pad = nblocks * block_eff - v
+    xp = jnp.pad(mat, ((0, 0), (0, pad))).astype(jnp.float32)
+    xp = xp.reshape(n, nblocks, block_eff)
+    idx = jnp.broadcast_to(jnp.arange(block_eff), xp.shape)
+    valid = (jnp.arange(nblocks * block_eff) < v).reshape(1, nblocks, block_eff)
+    mag = jnp.where(valid, jnp.abs(xp), -1.0)
+    if per_block < block_eff:
+        thr_mag, thr_pos = jax.lax.top_k(mag, per_block)     # ties → lowest idx
+        thr_mag = thr_mag[..., -1:]
+        thr_idx = thr_pos[..., -1:]
+        sel = (mag > thr_mag) | ((mag == thr_mag) & (idx <= thr_idx))
+    else:
+        sel = jnp.broadcast_to(valid, xp.shape)
+    contrib = jnp.where(sel & valid, xp, 0.0)
+    acc = contrib[0]
+    for t in range(1, n):                     # left-fold: same order as kernel
+        acc = acc + contrib[t]
+    return acc.reshape(-1)[:v].astype(mat.dtype)
+
+
+def blocked_topk_accumulate(mat: jax.Array, k: int, block: int = DEFAULT_BLOCK,
+                            *, fused: bool = True,
+                            impl: str = "pallas") -> jax.Array:
+    """Sum of the budget-``k`` blocked top-k compressions of each row of a
+    stacked (N, V) round — the accumulator's SPARSE/AUTO reduce.
+
+    ``fused=True`` (default) merges selection with application: one
+    :mod:`repro.kernels.accumulate.fused_scatter` launch, no pair arrays or
+    dense per-thread intermediates (``impl="jnp"`` keeps the pure-jnp
+    reference with the same selection + left-fold schedule).  ``fused=False``
+    reproduces the historical compress→densify→add path (one
+    :func:`blocked_topk_sparsify` per row, scatter-add of the concatenated
+    pairs) — kept as the comparison baseline.  All four routes produce
+    bit-exact identical results: selection is block-local with ties broken
+    toward the lower index, and the fused left-fold matches the scatter-add's
+    per-index association order.
+    """
+    n_rows, v = mat.shape
+    nblocks, block_eff, per_block = block_layout(v, k, block)
+    if not fused:
+        pairs = [blocked_topk_sparsify(mat[t], k, block, impl=impl)
+                 for t in range(n_rows)]
+        return densify(jnp.concatenate([p.idx for p in pairs]),
+                       jnp.concatenate([p.vals for p in pairs]), v)
+    if impl == "pallas":
+        from repro.kernels.accumulate.fused_scatter import fused_topk_scatter
+        return fused_topk_scatter(mat, per_block=per_block, block_eff=block_eff)
+    elif impl == "jnp":
+        return _fused_accumulate_jnp(mat, nblocks, block_eff, per_block)
+    raise ValueError(f"impl must be pallas|jnp, got {impl!r}")
+
+
 def nnz(x: jax.Array) -> jax.Array:
     return jnp.sum((x != 0).astype(jnp.int32))
 

@@ -1,0 +1,106 @@
+"""Bitonic sorting network over (magnitude, index) keys + carried payloads.
+
+The top-k selection kernels need a *partial sort*: the ``per_block`` largest
+|x| entries of each lane block, ties broken toward the lower index (so the
+result is element-wise identical to the historical argmax→mask loop, whose
+``jnp.argmax`` picks the first maximum).  A bitonic network gives that in
+``O(log² L)`` compare-exchange stages of full-width vector ops — independent
+of k — where the argmax loop pays k sequential reductions.
+
+The network is expressed as reshapes + ``jnp.where`` only, so the same
+function runs inside a Pallas kernel (compiled or interpret mode) and as a
+plain jnp reference.  Stage structure (``L`` padded to a power of two)::
+
+    for k in 2, 4, ..., L:          # bitonic run length being merged
+        for j in k/2, k/4, ..., 1:  # compare-exchange distance
+            partner pairs are (i, i+j) for i with (i // j) even
+
+Element ``i = q·2j + h·j + r`` maps to position ``[..., q, h, r]`` of a
+``(..., L/2j, 2, j)`` view; since ``h·j + r < 2j ≤ k`` the region direction
+bit ``i & k`` depends only on ``q``, so it is a trace-time constant mask.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _compare_exchange(mag, idx, payloads, k: int, j: int):
+    """One stage: order partner pairs at distance j within runs of length k."""
+    lead = mag.shape[:-1]
+    length = mag.shape[-1]
+    pairs = length // (2 * j)
+    # Direction of each run: descending where region bit k is clear (the
+    # overall sort is descending, so the usual asc/desc roles are flipped).
+    # Built from an iota, not a host constant — Pallas kernels cannot capture
+    # device constants.
+    q = jax.lax.broadcasted_iota(jnp.int32, (pairs, 1), 0)
+    desc = (q * (2 * j)) & k == 0                                     # (pairs, 1)
+
+    def halves(t):
+        s = t.reshape(lead + (pairs, 2, j))
+        return s[..., 0, :], s[..., 1, :]
+
+    a_mag, b_mag = halves(mag)
+    a_idx, b_idx = halves(idx)
+    # Order: mag descending, ties by idx ascending.  "a ranks below b":
+    a_less = (a_mag < b_mag) | ((a_mag == b_mag) & (a_idx > b_idx))
+    swap = jnp.where(desc, a_less, ~a_less)
+
+    def merge(a, b):
+        na = jnp.where(swap, b, a)
+        nb = jnp.where(swap, a, b)
+        return jnp.stack([na, nb], axis=-2).reshape(lead + (length,))
+
+    new_payloads = tuple(merge(*halves(p)) for p in payloads)
+    return merge(a_mag, b_mag), merge(a_idx, b_idx), new_payloads
+
+
+def bitonic_sort_desc(mag, idx, *payloads):
+    """Sort along the last axis by (mag descending, idx ascending).
+
+    ``idx`` must be unique along the last axis (positions), making the order
+    a strict total order, so the network's output is deterministic and
+    matches first-occurrence argmax selection on magnitude ties.  Extra
+    ``payloads`` arrays (same shape) are carried through the permutation.
+    Non-power-of-two lengths are padded with ``-inf`` magnitudes (sort last)
+    and sliced back off.  Returns ``(mag, idx, *payloads)`` sorted.
+    """
+    length = mag.shape[-1]
+    padded = 1 << max(0, length - 1).bit_length()
+    if padded != length:
+        pad = padded - length
+        widths = [(0, 0)] * (mag.ndim - 1) + [(0, pad)]
+        mag = jnp.pad(mag, widths, constant_values=-jnp.inf)
+        # Unique pad indices keep the comparator a strict total order.
+        pad_idx = (length + jax.lax.iota(jnp.int32, pad)).astype(idx.dtype)
+        idx = jnp.concatenate(
+            [idx, jnp.broadcast_to(pad_idx, idx.shape[:-1] + (pad,))], axis=-1)
+        payloads = tuple(jnp.pad(p, widths) for p in payloads)
+
+    k = 2
+    while k <= padded:
+        j = k // 2
+        while j >= 1:
+            mag, idx, payloads = _compare_exchange(mag, idx, payloads, k, j)
+            j //= 2
+        k *= 2
+
+    if padded != length:
+        mag, idx = mag[..., :length], idx[..., :length]
+        payloads = tuple(p[..., :length] for p in payloads)
+    return (mag, idx, *payloads)
+
+
+def bitonic_topk_desc(mag, idx, *payloads, k: int):
+    """First ``k`` entries of :func:`bitonic_sort_desc` — a partial sort.
+
+    (The network still sorts the full axis; the slice just names the
+    contract call sites rely on.)
+    """
+    out = bitonic_sort_desc(mag, idx, *payloads)
+    return tuple(t[..., :k] for t in out)
+
+
+__all__ = ["bitonic_sort_desc", "bitonic_topk_desc"]

@@ -6,8 +6,17 @@ production form is blocked top-k: each 128-lane-aligned block contributes its
 global sort (the same schedule :func:`repro.core.sparse.blocked_topk_sparsify`
 implements in jnp — that is the oracle).
 
-Grid = (V / block_v,).  Selection is k iterations of (max → record → mask),
-k is small (k ≤ 64 per block in practice); everything stays in VMEM.
+Grid = (V / block_v,).  Two selection methods, identical outputs:
+
+* ``method="argmax"`` — k iterations of (max → record → mask).  k sequential
+  reductions; fine for small budgets (k ≤ 64 per block).
+* ``method="bitonic"`` — one :mod:`repro.kernels.bitonic` partial sort per
+  block, O(log² block_v) vector stages *independent of k*, so large budgets
+  stop scaling linearly.
+
+Both stay in VMEM; ties break toward the lower index in both (``jnp.argmax``
+picks the first maximum, the bitonic comparator orders (mag desc, idx asc)),
+so the pair streams are element-wise identical.
 """
 
 from __future__ import annotations
@@ -17,6 +26,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.bitonic import bitonic_topk_desc
 
 
 def _topk_kernel(x_ref, idx_ref, val_ref, *, k: int, block_v: int, total: int):
@@ -38,13 +49,39 @@ def _topk_kernel(x_ref, idx_ref, val_ref, *, k: int, block_v: int, total: int):
     jax.lax.fori_loop(0, k, body, (mag,))
 
 
+def _topk_bitonic_kernel(x_ref, idx_ref, val_ref, *, k: int, block_v: int,
+                         total: int):
+    j = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                       # (block_v,)
+    base = j * block_v
+    pos = base + jax.lax.iota(jnp.int32, block_v)
+    valid = pos < total
+    mag = jnp.where(valid, jnp.abs(x), -1.0)
+    top_mag, top_idx, top_val = bitonic_topk_desc(mag, pos, x, k=k)
+    ok = top_mag >= 0                            # padded/exhausted → (0, 0) pair
+    idx_ref[...] = jnp.where(ok, top_idx, 0).astype(jnp.int32)
+    val_ref[...] = jnp.where(ok, top_val, 0.0).astype(val_ref.dtype)
+
+
+_KERNELS = {"argmax": _topk_kernel, "bitonic": _topk_bitonic_kernel}
+
+# The argmax loop pays k sequential reductions, the bitonic network a fixed
+# log²-stage cost — the crossover sits around one VMEM block's worth of k.
+BITONIC_MIN_K = 65
+
+
 def topk_compress_blocked(x, *, k_per_block: int, block_v: int = 1024,
-                          interpret: bool = False):
+                          interpret: bool = False, method: str | None = None):
     """x (V,) → (idx (nblocks*k,), vals (nblocks*k,)) — blocked top-k pairs."""
     v = x.shape[0]
     block_v = min(block_v, v)
     nblocks = pl.cdiv(v, block_v)
-    kernel = functools.partial(_topk_kernel, k=k_per_block, block_v=block_v, total=v)
+    if method is None:
+        method = "bitonic" if k_per_block >= BITONIC_MIN_K else "argmax"
+    if method not in _KERNELS:
+        raise ValueError(f"method must be argmax|bitonic, got {method!r}")
+    kernel = functools.partial(_KERNELS[method], k=k_per_block, block_v=block_v,
+                               total=v)
     idx, vals = pl.pallas_call(
         kernel,
         grid=(nblocks,),

@@ -14,8 +14,12 @@ import jax
 from repro.kernels.topk_compress.kernel import topk_compress_blocked
 
 
-@partial(jax.jit, static_argnames=("k_per_block", "block_v", "interpret"))
-def topk_compress(x, *, k_per_block: int, block_v: int = 1024, interpret=None):
+@partial(jax.jit, static_argnames=("k_per_block", "block_v", "interpret", "method"))
+def topk_compress(x, *, k_per_block: int, block_v: int = 1024, interpret=None,
+                  method=None):
+    """``method`` picks the selection kernel: ``"argmax"`` (k-iteration loop),
+    ``"bitonic"`` (partial sort, k-independent), or ``None`` to auto-select
+    bitonic for budgets past the argmax crossover (k_per_block ≥ 65)."""
     if x.ndim != 1:
         raise ValueError(f"topk_compress wants a 1-D vector, got shape {x.shape}")
     if k_per_block < 1:
@@ -27,4 +31,4 @@ def topk_compress(x, *, k_per_block: int, block_v: int = 1024, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return topk_compress_blocked(x, k_per_block=k_per_block, block_v=block_v,
-                                 interpret=interpret)
+                                 interpret=interpret, method=method)

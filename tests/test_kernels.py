@@ -74,6 +74,76 @@ def test_topk_compress_sweep(v, k, bv):
         np.asarray(sparse_scatter_add_ref(ridx, rvals, v)), rtol=1e-6)
 
 
+@pytest.mark.parametrize("v,k,bv", [(900, 4, 256), (2048, 16, 512), (100, 2, 64),
+                                    (1000, 200, 256), (4096, 256, 1024)])
+def test_topk_bitonic_matches_argmax_elementwise(v, k, bv):
+    """The bitonic partial sort must reproduce the argmax loop's pair stream
+    *element for element* — same indices in the same slots (ties at equal
+    magnitude break toward the lower index in both), not just the same sum."""
+    from repro.kernels.topk_compress.kernel import topk_compress_blocked
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(v,)).astype(np.float32)
+    x[rng.random(v) < 0.5] = 0.0      # magnitude ties at zero
+    x = jnp.asarray(x)
+    ia, va = topk_compress_blocked(x, k_per_block=k, block_v=bv,
+                                   interpret=True, method="argmax")
+    ib, vb = topk_compress_blocked(x, k_per_block=k, block_v=bv,
+                                   interpret=True, method="bitonic")
+    assert np.array_equal(np.asarray(ia), np.asarray(ib))
+    assert np.array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_topk_method_auto_selection():
+    from repro.kernels.topk_compress.kernel import BITONIC_MIN_K
+    from repro.kernels.topk_compress.ops import topk_compress
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(4096,)), jnp.float32)
+    # method=None must agree with both explicit methods on either side of the
+    # crossover (they are element-wise identical, so this pins the dispatch
+    # without reaching into kernel internals)
+    for k in (BITONIC_MIN_K - 1, BITONIC_MIN_K):
+        auto = topk_compress(x, k_per_block=k, block_v=1024, interpret=True)
+        for method in ("argmax", "bitonic"):
+            explicit = topk_compress(x, k_per_block=k, block_v=1024,
+                                     interpret=True, method=method)
+            assert np.array_equal(np.asarray(auto[0]), np.asarray(explicit[0]))
+    with pytest.raises(ValueError, match="argmax|bitonic"):
+        topk_compress(x, k_per_block=4, block_v=1024, interpret=True,
+                      method="quicksort")
+
+
+@pytest.mark.parametrize("n,v,k,block", [
+    (4, 16384, 512, 1024),     # the accumulator bench shape
+    (8, 1000, 50, 256),        # ragged tail (1000 = 3×256 + 232)
+    (1, 100, 10, 1024),        # single thread, one short block
+    (3, 900, 900, 256),        # quota ≥ block: selection degenerates to all
+    (2, 7, 3, 1024),           # tiny vector, non-pow2 block
+])
+def test_fused_scatter_bitexact_vs_unfused(n, v, k, block):
+    """The fused sparsify→scatter-add must be *bit-exact* against the
+    compress→densify→add path it replaces, for both impls, across densities
+    (dense rounds, realistic sparse rounds, all-zero rounds)."""
+    from repro.core.sparse import blocked_topk_accumulate
+    rng = np.random.default_rng(9)
+    for density in (0.0, 0.01, 0.3, 1.0):
+        mat = rng.normal(size=(n, v)).astype(np.float32)
+        mat[rng.random((n, v)) >= density] = 0.0
+        mat = jnp.asarray(mat)
+        ref = blocked_topk_accumulate(mat, k, block, fused=False)
+        fused = blocked_topk_accumulate(mat, k, block, fused=True, impl="pallas")
+        fused_jnp = blocked_topk_accumulate(mat, k, block, fused=True, impl="jnp")
+        assert np.array_equal(np.asarray(ref), np.asarray(fused)), density
+        assert np.array_equal(np.asarray(ref), np.asarray(fused_jnp)), density
+
+
+def test_fused_scatter_kernel_validation():
+    from repro.kernels.accumulate.fused_scatter import fused_topk_scatter
+    with pytest.raises(ValueError, match=r"\(N, V\)"):
+        fused_topk_scatter(jnp.zeros((8,)), per_block=2, block_eff=8)
+    with pytest.raises(ValueError, match="per_block"):
+        fused_topk_scatter(jnp.zeros((2, 8)), per_block=0, block_eff=8)
+
+
 @pytest.mark.parametrize("m,v,bv", [(50, 700, 256), (200, 4096, 1024), (1, 64, 64)])
 def test_scatter_add_sweep(m, v, bv):
     from repro.kernels.sparse_update.kernel import sparse_scatter_add

@@ -64,8 +64,6 @@ def test_ring_change_moves_only_affected_arcs():
 
 def test_ring_validation():
     with pytest.raises(ValueError):
-        HashRing([])
-    with pytest.raises(ValueError):
         HashRing([0], vnodes=0)
     store = GlobalStore(shards=2)
     with pytest.raises(ValueError):
@@ -75,6 +73,76 @@ def test_ring_validation():
     store.remove_shard(1)
     with pytest.raises(ValueError):
         store.remove_shard(0)       # never remove the last shard
+
+
+def test_empty_ring_owner_raises_value_error():
+    # an empty ring is a legal value object (removed() of the last shard),
+    # but resolving an owner on it must be a clear ValueError — it used to
+    # escape as a bare ZeroDivisionError from the modulo
+    ring = HashRing([])
+    assert len(ring) == 0
+    with pytest.raises(ValueError, match="empty hash ring"):
+        ring.owner("anything")
+    emptied = HashRing([3]).removed(3)
+    assert emptied.ids == ()
+    with pytest.raises(ValueError, match="empty hash ring"):
+        emptied.owner("x")
+
+
+def test_ring_version_bumps_on_topology_change():
+    ring = HashRing([0, 1])
+    assert ring.version == 0
+    grown = ring.added(2)
+    assert grown.version == 1
+    assert grown.removed(2).version == 2
+    assert ring.version == 0                      # immutable: original untouched
+
+    store = GlobalStore(shards=2)
+    assert store.ring_version == 0
+    store.add_shard()
+    assert store.ring_version == 1
+    store.remove_shard(2)
+    assert store.ring_version == 2
+
+
+def test_stale_owner_handle_across_rebalance():
+    """A memoised OwnerHandle must keep every op correct across add_shard/
+    remove_shard: a stale handle is ignored (the op re-hashes), a current
+    one routes straight to the shard."""
+    store = GlobalStore(shards=2)
+    names = [f"h{i}" for i in range(64)]
+    for i, n in enumerate(names):
+        store.def_global(n, jnp.float32(i))
+    handles = {n: store.owner_handle(n) for n in names}
+    for n, h in handles.items():
+        assert h.version == 0 and h.shard == store.shard_of(n)
+        assert float(store.get(n, owner=h)) == float(store.get(n))
+
+    mig = store.add_shard()                 # every handle is now stale
+    assert store.ring_version == 1
+    assert mig.moved                        # some names actually migrated
+    for i, n in enumerate(names):
+        # stale handles (wrong shard for moved names) must still resolve
+        assert float(store.get(n, owner=handles[n])) == float(i)
+        store.set(n, jnp.float32(i * 2), owner=handles[n])
+        assert float(store.inc(n, 1, owner=handles[n])) == float(i * 2 + 1)
+    vals = store.mget(names, owners=[handles[n] for n in names])
+    assert [float(v) for v in vals] == [float(i * 2 + 1) for i in range(len(names))]
+
+    # refreshed handles route correctly under the new topology too
+    fresh = {n: store.owner_handle(n) for n in names}
+    store.remove_shard(2)
+    assert store.ring_version == 2
+    for i, n in enumerate(names):           # stale again, still correct
+        assert float(store.get(n, owner=fresh[n])) == float(i * 2 + 1)
+
+
+def test_owner_handles_in_mget_must_align():
+    store = GlobalStore(shards=2)
+    store.def_global("a", 1.0)
+    store.def_global("b", 2.0)
+    with pytest.raises(ValueError, match="align"):
+        store.mget(["a", "b"], owners=[store.owner_handle("a")])
 
 
 # -- S=1 flat-store equivalence ----------------------------------------------

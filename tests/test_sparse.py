@@ -212,6 +212,91 @@ print("SPARSE_ITERATE_OK")
     assert "SPARSE_ITERATE_OK" in out
 
 
+def test_fused_parity_modes_and_shards():
+    """The fused sparsify→scatter-add reduce (the default host SPARSE/AUTO
+    path) across AccumMode {SPARSE, AUTO} × shards {1, 8}, including inside
+    ctx.iterate: results bit-exact everywhere, and the pairs-derived
+    wire_traffic() figure identical host↔SPMD and across shard counts."""
+    out = run_subprocess_devices("""
+import jax.numpy as jnp, numpy as np
+from repro.core import Session
+from repro.core.sparse import pair_capacity
+
+V, k, N, iters = 512, 8, 4, 3
+P = pair_capacity(V, k)
+# lossless rows so AUTO takes the sparse branch every round
+rows = np.zeros((N, V), np.float32)
+for t in range(N):
+    rows[t, t * 5: t * 5 + 2] = float(t + 1)
+rows = jnp.asarray(rows)
+
+def run(backend, mode, shards):
+    sess = Session(backend=backend, n_nodes=2, threads_per_node=2,
+                   shards=shards)
+    out = sess.new_array("o", (V,), sparse_k=k)
+    def proc(ctx, xs):
+        def step(c):
+            return c + out.accumulate(xs[0], mode=mode)
+        return ctx.iterate(step, jnp.zeros((V,)), iters)
+    res = sess.run(proc, data=(rows,))
+    return np.asarray(res[0]), sess.wire_traffic()
+
+for mode in ("sparse", "auto"):
+    results = {(b, s): run(b, mode, s)
+               for b in ("host", "spmd") for s in (1, 8)}
+    base_r, base_w = results[("host", 1)]
+    for key, (r, w) in results.items():
+        assert np.array_equal(base_r, r), (mode, key)     # bit-exact parity
+        assert w == base_w == iters * (N * 2 * P + V), (mode, key, w)
+print("FUSED_PARITY_OK")
+""", n_devices=4)
+    assert "FUSED_PARITY_OK" in out
+
+
+def test_fused_kernel_path_and_owner_cache_counters():
+    """Observability satellite: step.trace attributes the fused win — the
+    reduce path lands in accum.kernel_path.{dense,sparse,fused} counters and
+    memoised SharedRef owner handles in store.owner_cache_hit."""
+    V, N = 256, 4
+    rows = jnp.asarray(np.eye(N, V, dtype=np.float32))    # lossless under k=8
+    sess = Session(backend="host", n_nodes=2, threads_per_node=2,
+                   shards=2, trace=True)
+    try:
+        out = sess.new_array("o", (V,), sparse_k=8)
+
+        def proc(ctx, xs):
+            out.accumulate(xs[0], mode="sparse")
+            out.accumulate(xs[0], mode="auto")            # resolves to sparse
+            out.accumulate(xs[0], mode="reduce_scatter")
+            return out.get()
+
+        sess.run(proc, data=(rows,))
+        counters = sess.metrics()["trace"]["counters"]
+        assert counters["accum.kernel_path.fused"] == 2   # sparse + auto
+        assert counters["accum.kernel_path.dense"] == 1
+        assert "accum.kernel_path.sparse" not in counters  # unfused never ran
+        # every out.get() after the first resolved its owner from the handle
+        assert counters.get("store.owner_cache_hit", 0) > 0
+    finally:
+        sess.tracer.disable()
+
+    # fused=False through the registry: the unfused path is attributed too
+    sess2 = Session(backend="host", n_nodes=2, threads_per_node=2, trace=True)
+    try:
+        out2 = sess2.new_array("o2", (V,), sparse_k=8)
+        sess2.backend.fused = False
+
+        def proc2(ctx, xs):
+            out2.accumulate(xs[0], mode="sparse")
+
+        sess2.run(proc2, data=(rows,))
+        counters2 = sess2.metrics()["trace"]["counters"]
+        assert counters2["accum.kernel_path.sparse"] == 1
+        assert "accum.kernel_path.fused" not in counters2
+    finally:
+        sess2.tracer.disable()
+
+
 def test_inc_backend_parity():
     """N threads calling ref.inc(a) advance the value by N·a on BOTH backends
     (SPMD lowers to one psum of the per-thread amounts), inside and outside
