@@ -20,6 +20,7 @@ BENCHES = [
     ("accumulator", "benchmarks.bench_accumulator"),        # §5.2 traffic claim
     ("apps", "benchmarks.bench_apps"),                      # Figs. 4–10
     ("fault_tolerance", "benchmarks.bench_fault_tolerance"),  # Fig. 11
+    ("rebalance", "benchmarks.bench_rebalance"),            # step.tiers gate
     ("kernels", "benchmarks.bench_kernels"),                # Pallas μs/call
     ("compile", "benchmarks.bench_compile"),                # ctx.iterate O(1) claim
     ("trace", "benchmarks.bench_trace"),                    # step.trace overhead

@@ -310,7 +310,8 @@ class Checker:
     def lock_acquired(self, key) -> None:
         held = self._held()
         violation = check_order(held, key,
-                                getattr(self._tls, "rebalance", False))
+                                getattr(self._tls, "rebalance", False),
+                                getattr(self._tls, "handoff", False))
         if violation is not None:
             slug, message = violation
             site = call_site()
@@ -333,6 +334,14 @@ class Checker:
 
     def rebalance_end(self) -> None:
         self._tls.rebalance = False
+
+    def handoff_begin(self) -> None:
+        """Arm the arc-handoff exemption for the calling thread: a migration
+        window may hold exactly one sorted pair of shard locks."""
+        self._tls.handoff = True
+
+    def handoff_end(self) -> None:
+        self._tls.handoff = False
 
     # -- lint entry points (session.py hooks) ---------------------------------
 

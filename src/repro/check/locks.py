@@ -27,11 +27,16 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 LockKey = Tuple[str, int]
 
 
-def check_order(held: List[LockKey], key: LockKey,
-                rebalance: bool) -> Optional[Tuple[str, str]]:
+def check_order(held: List[LockKey], key: LockKey, rebalance: bool,
+                handoff: bool = False) -> Optional[Tuple[str, str]]:
     """Validate acquiring ``key`` while holding ``held`` (oldest first).
     Returns ``(kind_slug, message)`` on a violation, else None.  Pure
-    function — the caller owns all state."""
+    function — the caller owns all state.
+
+    ``rebalance`` is the stop-the-world exemption (any number of shard locks,
+    sorted).  ``handoff`` is the incremental arc-handoff exemption: exactly
+    one *pair* of shard locks, sorted — a migration window moves one entry at
+    a time, so a third shard lock under the handoff flag is a bug."""
     domain, ident = key
     if domain == "shard":
         for hd, hi in held:
@@ -44,16 +49,25 @@ def check_order(held: List[LockKey], key: LockKey,
                         f"shard {ident} lock requested under the allocator "
                         "lock — the alloc lock must not nest")
             if hd == "shard" and hi != ident:
-                if not rebalance:
+                if not rebalance and not handoff:
                     return ("shard-shard-nesting",
                             f"shard {ident} lock requested while holding "
-                            f"shard {hi} — only the rebalancer may hold two "
-                            "shards, in sorted id order")
+                            f"shard {hi} — only the rebalancer or an arc "
+                            "handoff may hold two shards, in sorted id order")
                 if hi > ident:
-                    return ("rebalance-unsorted",
-                            f"rebalance acquired shard {ident} after shard "
-                            f"{hi} — shard locks must be taken in sorted id "
-                            "order")
+                    return ("rebalance-unsorted" if rebalance
+                            else "handoff-unsorted",
+                            f"{'rebalance' if rebalance else 'arc handoff'} "
+                            f"acquired shard {ident} after shard {hi} — "
+                            "shard locks must be taken in sorted id order")
+                if handoff and not rebalance:
+                    others = {i for d, i in held if d == "shard" and i != ident}
+                    if len(others) >= 2:
+                        return ("handoff-pair-overflow",
+                                f"arc handoff requested shard {ident} while "
+                                f"already holding shards {sorted(others)} — "
+                                "a handoff moves one entry under exactly two "
+                                "shard locks")
     elif domain == "node":
         for hd, hi in held:
             if hd == "node" and hi != ident:

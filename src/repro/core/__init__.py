@@ -3,6 +3,7 @@
 - :mod:`repro.core.session` - the Table-1 facade: Session / SharedRef / backends
 - :mod:`repro.core.dsm` - GlobalStore distributed shared memory (fine/coarse)
 - :mod:`repro.core.shards` - consistent-hash sharded store beneath the DSM
+- :mod:`repro.core.tiers` - step.tiers: pluggable cold tiers (host mem / disk)
 - :mod:`repro.core.accumulator` - DAddAccumulator (SPMD + host forms)
 - :mod:`repro.core.cache` - directory-based write-invalidate DSM cache
 - :mod:`repro.core.sync` - DBarrier / DSemaphore / SSP clock
@@ -23,7 +24,14 @@ from repro.core.cache import DSMCache, CacheStats
 from repro.core.compat import axis_size, cost_analysis, make_mesh, shard_map
 from repro.core.dsm import GlobalStore, PackSpec, pack_spec, pack_tree, unpack_tree
 from repro.core.session import Backend, HostBackend, Session, SharedRef, SpmdBackend, WorkerCtx
-from repro.core.shards import HashRing, OwnerHandle, Shard, ShardedStore, ShardMigration
+from repro.core.shards import (
+    HashRing,
+    MigrationWindow,
+    OwnerHandle,
+    Shard,
+    ShardedStore,
+    ShardMigration,
+)
 from repro.core.sparse import (
     blocked_topk_accumulate,
     blocked_topk_sparsify,
@@ -33,6 +41,7 @@ from repro.core.sparse import (
     topk_sparsify,
 )
 from repro.core.sync import DBarrier, DSemaphore, SSPClock
+from repro.core.tiers import ColdTier, DiskTier, HostMemTier
 from repro.core.telemetry import NULL_TRACER, Tracer, as_tracer
 from repro.core.threads import DThread, DThreadPool, ThreadState, spmd_threads
 
@@ -43,7 +52,8 @@ __all__ = [
     "axis_size", "cost_analysis", "make_mesh", "shard_map",
     "GlobalStore", "PackSpec", "pack_spec", "pack_tree", "unpack_tree",
     "Backend", "HostBackend", "Session", "SharedRef", "SpmdBackend", "WorkerCtx",
-    "HashRing", "OwnerHandle", "Shard", "ShardedStore", "ShardMigration",
+    "HashRing", "MigrationWindow", "OwnerHandle", "Shard", "ShardedStore", "ShardMigration",
+    "ColdTier", "DiskTier", "HostMemTier",
     "blocked_topk_accumulate", "blocked_topk_sparsify", "densify",
     "sparse_beneficial", "sparse_beneficial_batch", "topk_sparsify",
     "DBarrier", "DSemaphore", "SSPClock",

@@ -42,11 +42,17 @@ from repro.core.addressing import TPU_PACKAGE_ELEMS, align_up
 from repro.core.shards import (  # noqa: F401  (re-exported, public surface)
     GlobalEntry,
     HashRing,
+    MigrationWindow,
     OwnerHandle,
     Shard,
     ShardedStore,
     ShardMigration,
     _nbytes,
+)
+from repro.core.tiers import (  # noqa: F401  (re-exported, public surface)
+    ColdTier,
+    DiskTier,
+    HostMemTier,
 )
 
 

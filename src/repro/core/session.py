@@ -761,6 +761,14 @@ class Session:
         when adopting ``store``).  ``1`` is the paper's single flat store;
         larger counts let workers touching different shards read/write/inc
         concurrently — there is no session-global cache lock.
+    cold_tier / cold_budget:
+        ``step.tiers`` knobs for a freshly built store (ignored when
+        adopting ``store``): ``cold_tier`` is ``None`` (default, pure
+        in-memory), ``"host"`` (pinned host-memory numpy tier), ``"disk"``
+        (pickled spill files), or any
+        :class:`~repro.core.tiers.ColdTier` instance; ``cold_budget`` caps
+        per-shard hot bytes — beyond it, least-recently-used entries demote
+        to the cold tier and promote back (epoch-preserving) on access.
     trace:
         ``step.trace`` arming: ``True`` arms a fresh
         :class:`~repro.core.telemetry.Tracer`, an existing tracer is adopted
@@ -786,6 +794,8 @@ class Session:
                  store: Optional[GlobalStore] = None,
                  granularity: str = "coarse",
                  shards: int = 1,
+                 cold_tier=None,
+                 cold_budget: Optional[int] = None,
                  accum_mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
                  cache_capacity: int = 1024,
                  trace: "telemetry.Tracer | bool | None" = None,
@@ -807,8 +817,13 @@ class Session:
         # checker; a Checker instance is adopted as-is (FT recovery re-arms
         # the failed session's checker); default is disabled, one branch.
         self.checker = stepcheck.as_checker(check)
+        # step.tiers: cold_tier ("host" | "disk" | a ColdTier instance) and
+        # cold_budget (per-shard hot bytes before LRU demotion kicks in) are
+        # store-construction options — like `shards`, they are ignored when
+        # an existing store is adopted (FT recovery keeps its tiering as-is)
         self.store = store if store is not None else GlobalStore(
-            granularity=granularity, shards=shards)
+            granularity=granularity, shards=shards,
+            cold_tier=cold_tier, cold_budget=cold_budget)
         self.store.tracer = self.tracer
         self.store.checker = self.checker
         self.accum_mode = AccumMode(accum_mode)
@@ -1022,7 +1037,13 @@ class Session:
         _warn_at_caller("Session.stats() is deprecated; use Session.metrics() "
                         "for the canonical normalized snapshot",
                         DeprecationWarning)
-        return {"store": dict(self.store.stats), "cache": self.cache.stats,
+        # frozen key set: tier/migration counters added later live only in
+        # metrics() — this view keeps the pre-tiers shape for old callers
+        legacy = ("get", "set", "inc", "bytes_get", "bytes_set",
+                  "transfers", "migrated_in", "migrated_out")
+        raw = self.store.stats
+        return {"store": {k: raw.get(k, 0) for k in legacy},
+                "cache": self.cache.stats,
                 "wire_traffic": self.wire_traffic()}
 
     def metrics(self) -> Dict[str, Any]:
@@ -1038,6 +1059,10 @@ class Session:
         * ``wire_traffic`` — accumulator elements, host/SPMD comparable
         * ``shards`` — per-shard ``{store, cache, wire_traffic}`` rows with
           the same canonical shapes
+        * ``tiers`` — hot/cold tier occupancy + hit/promotion/demotion
+          counters (:meth:`ShardedStore.tier_stats`), with a ``migration``
+          sub-dict of lifetime rebalance-window totals
+          (:meth:`ShardedStore.migration_totals`)
         * ``trace`` — :meth:`Tracer.snapshot` (span counts, counters,
           latency histograms); ``{"enabled": False, ...}`` when unarmed
         """
@@ -1051,6 +1076,8 @@ class Session:
                 "cache": self.cache.stats.as_dict(),
                 "wire_traffic": self.wire_traffic(),
                 "shards": shard_rows,
+                "tiers": {**self.store.tier_stats(),
+                          "migration": self.store.migration_totals()},
                 "trace": self.tracer.snapshot()}
 
     def shard_stats(self) -> Dict[int, Dict[str, Any]]:

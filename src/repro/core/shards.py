@@ -23,6 +23,27 @@ partitioned form:
   entry *with its epoch*, its delete-era generation and its directory record,
   so no stale cache replica can survive a migration and a post-migration
   redeclare still starts past every epoch the name ever had.
+* **Tiered entries** (step.tiers) — each :class:`Shard` is a two-tier store:
+  the hot in-memory dict plus a per-store pluggable
+  :class:`~repro.core.tiers.ColdTier` (host-mem or disk).  When a
+  ``cold_budget`` is set, least-recently-used entries demote their *value
+  payload* to the cold tier (metadata — epoch, slot, spec, directory — stays
+  hot, so coherence never touches the backend) and promote back on access
+  with their epoch intact: a cache replica that validated before a
+  demote/promote cycle still validates after it.
+* **Incremental arc handoff** — by default ``add_shard``/``remove_shard``
+  open a :class:`MigrationWindow` instead of freezing the store: the new
+  ring is published immediately, and each moved key crosses shards on first
+  access (pull-on-access under exactly the two involved shard locks) or via
+  the inline drain.  A reader's worst-case pause is one entry migration, not
+  the whole arc; ``incremental=False`` keeps the legacy stop-the-world path.
+
+During a window an operation that resolves the *new* owner and misses
+double-checks the window's pending set (pulling the entry across before
+retrying), while an operation that locked the *old* owner before the ring
+was published simply completes there — the entry lives in exactly one shard
+dict at any instant and every mutation happens under the lock of the shard
+currently holding it, so no reader can observe a stale value.
 
 Keys are placed by *name* rather than by allocated block address: names are
 the stable identity of shared data (addresses depend on allocation order and
@@ -39,6 +60,7 @@ retry under the new one (see ``locked_entry``).
 from __future__ import annotations
 
 import bisect
+import math
 import threading
 import time
 import weakref
@@ -60,12 +82,29 @@ from repro.core.addressing import (
     WORD_BYTES,
     ring_hash,
 )
+from repro.core.tiers import ColdTier, resolve_cold_tier
 
 DEFAULT_VNODES = 128
 
 
 def _nbytes(v) -> int:
-    return int(sum(l.size * jnp.dtype(l.dtype).itemsize for l in jax.tree.leaves(v)))
+    # leaf.size is a cheap attribute on concrete arrays (this runs on every
+    # get/set); math.prod over the shape covers abstract leaves without one
+    total = 0
+    for leaf in jax.tree.leaves(v):
+        n = getattr(leaf, "size", None)
+        if n is None:
+            n = math.prod(leaf.shape)
+        total += int(n) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _demotable(value) -> bool:
+    """Only concrete array pytrees can spill — abstract entries (trace-mode
+    ShapeDtypeStructs) carry no payload to store."""
+    leaves = jax.tree.leaves(value)
+    return bool(leaves) and not any(isinstance(l, jax.ShapeDtypeStruct)
+                                    for l in leaves)
 
 
 @dataclass
@@ -81,6 +120,11 @@ class GlobalEntry:
     # (objects), so Set/Inc restore the same NamedSharding they started with
     spec: Optional[P] = None
     field_specs: Optional[Dict[str, P]] = None
+    # tier bookkeeping (step.tiers): hot_nbytes is this entry's share of the
+    # shard's hot-byte budget; cold_bytes is the payload size parked in the
+    # cold tier while value is None.  Both stay 0 when no tier is configured.
+    hot_nbytes: int = 0
+    cold_bytes: int = 0
 
 
 class HashRing:
@@ -163,20 +207,31 @@ class OwnerHandle:
 
 def _fresh_stats() -> Dict[str, int]:
     return {"get": 0, "set": 0, "inc": 0, "bytes_get": 0, "bytes_set": 0,
-            "transfers": 0, "migrated_in": 0, "migrated_out": 0}
+            "transfers": 0, "migrated_in": 0, "migrated_out": 0,
+            "migrated_bytes": 0, "hot_hits": 0, "cold_hits": 0,
+            "promotions": 0, "demotions": 0}
 
 
 class Shard:
     """One partition of the namespace: entries + generations + directory,
     guarded by this shard's own lock (an RLock: the cache layer composes
-    store ops while already holding it)."""
+    store ops while already holding it).
 
-    __slots__ = ("id", "lock", "entries", "gen", "directory", "stats")
+    ``entries`` is the *hot* tier — insertion order doubles as LRU order
+    when a cold tier is configured (hits reinsert at the MRU end).  ``cold``
+    indexes entries whose value payload lives in the store's cold tier:
+    the :class:`GlobalEntry` metadata (epoch, slot, spec, directory record)
+    stays here so validation and coherence never touch the backend."""
+
+    __slots__ = ("id", "lock", "entries", "cold", "hot_bytes", "gen",
+                 "directory", "stats")
 
     def __init__(self, shard_id: int):
         self.id = int(shard_id)
         self.lock = threading.RLock()
         self.entries: Dict[str, GlobalEntry] = {}
+        self.cold: Dict[str, GlobalEntry] = {}
+        self.hot_bytes = 0
         # per-name monotonic generation: a name deleted at epoch e re-declares
         # at e+1, so no cache replica of the deleted era can ever validate as
         # fresh against the new entry (delete→redeclare stale-read fix)
@@ -186,19 +241,24 @@ class Shard:
         self.stats = _fresh_stats()
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
-        return f"Shard(id={self.id}, names={len(self.entries)})"
+        return (f"Shard(id={self.id}, names={len(self.entries)}, "
+                f"cold={len(self.cold)})")
 
 
 @dataclass
 class ShardMigration:
-    """Report of one ring topology change: which keys moved where, and the
-    epoch each moved key carried across (preserved by contract)."""
+    """Report of one ring topology change: which keys moved where, the epoch
+    each moved key carried across (preserved by contract), how many bytes
+    crossed shards and how long the migration window stayed open."""
 
     added: Tuple[int, ...]
     removed: Tuple[int, ...]
     moved: Dict[str, Tuple[int, int]]   # name -> (old shard, new shard)
     epochs: Dict[str, int]              # preserved epoch of each moved name
     total_names: int                    # namespace size at migration time
+    bytes_moved: int = 0                # payload bytes that crossed shards
+    window_s: float = 0.0               # open → closed wall time of the window
+    pulled: int = 0                     # entries migrated by reader/writer pulls
 
     @property
     def moved_names(self) -> List[str]:
@@ -207,6 +267,46 @@ class ShardMigration:
     @property
     def moved_fraction(self) -> float:
         return len(self.moved) / self.total_names if self.total_names else 0.0
+
+
+class MigrationWindow:
+    """State of one in-flight incremental arc handoff.
+
+    The new ring is already published when a window exists; ``pending`` maps
+    each not-yet-moved name to its ``(old owner, new owner)`` pair.  Until
+    the planner finishes snapshotting the source shards (``sealed``), the
+    pending set is still filling and membership is decided by comparing the
+    two rings instead.  The window closes (and fills in its
+    :class:`ShardMigration`'s ``bytes_moved``/``window_s``/``pulled``) when
+    the sealed pending set drains — by access pulls, ``migrate_step`` /
+    ``drain_window``, or the default inline drain of ``add_shard`` /
+    ``remove_shard``."""
+
+    __slots__ = ("old_ring", "new_ring", "pending", "lock", "t_open",
+                 "sealed", "closed", "entries_moved", "bytes_moved",
+                 "pulled", "migration")
+
+    def __init__(self, old_ring: HashRing, new_ring: HashRing):
+        self.old_ring = old_ring
+        self.new_ring = new_ring
+        self.pending: Dict[str, Tuple[int, int]] = {}
+        self.lock = threading.Lock()     # guards pending + the counters below
+        self.t_open = time.perf_counter()
+        self.sealed = False
+        self.closed = False
+        self.entries_moved = 0
+        self.bytes_moved = 0
+        self.pulled = 0
+        self.migration: Optional[ShardMigration] = None
+
+    @property
+    def remaining(self) -> int:
+        return len(self.pending)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"MigrationWindow(v{self.old_ring.version}->"
+                f"v{self.new_ring.version}, pending={len(self.pending)}, "
+                f"closed={self.closed})")
 
 
 class ShardedStore:
@@ -219,11 +319,15 @@ class ShardedStore:
     """
 
     def __init__(self, mesh: Optional[Mesh] = None, *, granularity: str = "coarse",
-                 shards: int = 1, vnodes: int = DEFAULT_VNODES):
+                 shards: int = 1, vnodes: int = DEFAULT_VNODES,
+                 cold_tier: "ColdTier | str | None" = None,
+                 cold_budget: Optional[int] = None):
         if granularity not in ("coarse", "fine"):
             raise ValueError(f"granularity must be coarse|fine, got {granularity}")
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
+        if cold_budget is not None and cold_budget < 0:
+            raise ValueError(f"cold_budget must be >= 0 bytes, got {cold_budget}")
         self.mesh = mesh
         self.granularity = granularity
         self._alloc = AddressAllocator(coarse=(granularity == "coarse"))
@@ -234,6 +338,21 @@ class ShardedStore:
         self._ring = HashRing(range(shards), vnodes=vnodes)
         self._rebalance_lock = threading.Lock()
         self._delete_hooks: List[Callable[[str], None]] = []
+        # step.tiers: the shared cold backend ("host" | "disk" | a ColdTier)
+        # and the per-shard hot-byte budget that triggers LRU demotion.  None
+        # keeps every path single-tier at one extra branch per op.
+        self._cold = resolve_cold_tier(cold_tier)
+        self._cold_budget = int(cold_budget) if cold_budget is not None else None
+        # incremental arc handoff: at most one open window at a time (the
+        # rebalance lock serialises openers; pulls run lock-free against it)
+        self._window: Optional[MigrationWindow] = None
+        self._mig_lock = threading.Lock()
+        self._migration_totals: Dict[str, Any] = {
+            "windows": 0, "entries_moved": 0, "bytes_moved": 0,
+            "pulled": 0, "window_s": 0.0}
+        # test/benchmark seam: called with the name inside each pair-locked
+        # entry move (deterministic stress tests inject per-entry delay here)
+        self._migrate_entry_hook: Optional[Callable[[str], None]] = None
         # step.trace instrumentation target; Session attaches its tracer here.
         # Disabled default + the module-level TRACING guard keep every store
         # op at one extra branch when nothing is armed.
@@ -329,63 +448,461 @@ class ShardedStore:
         the same contract the flat dict had.  ``owner`` is an optional
         :class:`OwnerHandle` *for this name*: when its version matches the
         snapshot it replaces the hash + bisect; otherwise it is ignored.
+
+        During an open migration window the name is settled first: if its
+        arc changed owner and it has not crossed yet, it is pulled to the
+        new owner under exactly the two involved shard locks — the reader's
+        pause is that one entry move, never the whole arc.  The entry may be
+        cold (``entry.value is None``); value-reading callers go through
+        ``_promote``.
         """
         while True:
             ring = self._ring
-            shard = self._shards[self._resolve_owner(ring, name, owner)]
+            win = self._window
+            pinned = self._settle(win, name) if win is not None else None
+            if pinned is not None:
+                shard = self._shards[pinned]
+            else:
+                shard = self._shards[self._resolve_owner(ring, name, owner)]
             self._lock_shard(shard)
             try:
                 entry = shard.entries.get(name)
                 if entry is not None:
+                    if self._cold is not None:
+                        shard.stats["hot_hits"] += 1
+                        # LRU touch: reinsertion puts the name at the MRU end
+                        shard.entries[name] = shard.entries.pop(name)
                     yield shard, entry
                     return
-                if self._ring is ring:
+                entry = shard.cold.get(name)
+                if entry is not None:
+                    shard.stats["cold_hits"] += 1
+                    yield shard, entry
+                    return
+                if self._ring is ring and (pinned is not None
+                                           or not self._window_pending(name)):
                     raise KeyError(name)
             finally:
                 self._unlock_shard(shard)
-            # the ring moved under us — resolve the new owner and retry
+            # the ring (or the window) moved under us — resolve and retry
 
     @contextmanager
     def locked_owner(self, name: str, owner: Optional[OwnerHandle] = None):
         """Like :meth:`locked_entry` but for declarations: the name need not
-        exist, only the ring snapshot must still be current once locked."""
+        exist, only the ring snapshot must still be current once locked.
+        Settling first matters here too — a redeclare during a window must
+        see the old owner's delete-era generation, or it could reuse an
+        epoch a stale replica still validates against."""
         while True:
             ring = self._ring
-            shard = self._shards[self._resolve_owner(ring, name, owner)]
+            win = self._window
+            pinned = self._settle(win, name) if win is not None else None
+            if pinned is not None:
+                shard = self._shards[pinned]
+            else:
+                shard = self._shards[self._resolve_owner(ring, name, owner)]
             self._lock_shard(shard)
             try:
-                if self._ring is ring:
+                if pinned is not None or self._ring is ring:
                     yield shard
                     return
             finally:
                 self._unlock_shard(shard)
 
+    # -- tiers (step.tiers: hot dict + pluggable cold backend) -----------------
+
+    def _promote(self, shard: Shard, e: GlobalEntry, *, load: bool = True) -> None:
+        """Move a cold entry back into the hot dict (owning shard lock held).
+
+        ``load=True`` reads the payload back from the cold tier and re-places
+        it under the entry's declared spec — the entry's epoch is untouched,
+        so a replica that validated before the demote still validates after
+        the promote.  ``load=False`` (Set overwrites the whole value) only
+        reclaims the tier slot; the caller assigns the value and accounts
+        bytes via :meth:`_note_resize`."""
+        name = e.name
+        if shard.cold.pop(name, None) is None:
+            return
+        if load:
+            payload = self._cold.get(name)
+            if isinstance(payload, dict):
+                specs = e.field_specs or {}
+                e.value = {k: self._place(jnp.asarray(v), specs.get(k))
+                           for k, v in payload.items()}
+            else:
+                e.value = self._place(jnp.asarray(payload), e.spec)
+            shard.stats["promotions"] += 1
+            trc = self.tracer
+            if telemetry.TRACING and trc.enabled:
+                trc.count("tier.promotions")
+        self._cold.delete(name)
+        e.cold_bytes = 0
+        e.hot_nbytes = _nbytes(e.value) if load else 0
+        shard.hot_bytes += e.hot_nbytes
+        shard.entries[name] = e
+
+    def _note_resize(self, shard: Shard, e: GlobalEntry) -> None:
+        """Re-account an entry's hot bytes after its value changed (owning
+        shard lock held), then demote LRU entries past the budget."""
+        nb = _nbytes(e.value)
+        shard.hot_bytes += nb - e.hot_nbytes
+        e.hot_nbytes = nb
+        self._maybe_demote(shard)
+
+    def _install(self, shard: Shard, entry: GlobalEntry) -> None:
+        """Insert a (re-)declared entry into the hot dict (owning shard lock
+        held), displacing any previous hot or cold incarnation of the name."""
+        name = entry.name
+        if self._cold is None:
+            shard.entries[name] = entry
+            return
+        prev = shard.entries.get(name)
+        if prev is not None:
+            shard.hot_bytes -= prev.hot_nbytes
+        elif shard.cold.pop(name, None) is not None:
+            self._cold.delete(name)
+        entry.hot_nbytes = _nbytes(entry.value)
+        shard.hot_bytes += entry.hot_nbytes
+        shard.entries[name] = entry
+        self._maybe_demote(shard)
+
+    def _maybe_demote(self, shard: Shard) -> None:
+        """Spill least-recently-used hot entries to the cold tier until the
+        shard is back under its hot-byte budget (owning shard lock held).
+        The just-touched entry sits at the MRU end, so it is only demoted
+        when it is the lone demotable entry left — never preferentially."""
+        budget = self._cold_budget
+        if budget is None or shard.hot_bytes <= budget:
+            return
+        trc = self.tracer
+        tracing = telemetry.TRACING and trc.enabled
+        while shard.hot_bytes > budget and len(shard.entries) > 1:
+            victim = None
+            for name, e in shard.entries.items():
+                if _demotable(e.value):
+                    victim = (name, e)
+                    break
+            if victim is None:
+                break
+            name, e = victim
+            nb = self._cold.put(name, e.value)
+            del shard.entries[name]
+            shard.hot_bytes -= e.hot_nbytes
+            e.hot_nbytes = 0
+            e.cold_bytes = nb
+            e.value = None
+            shard.cold[name] = e
+            shard.stats["demotions"] += 1
+            if tracing:
+                trc.count("tier.demotions")
+
+    @property
+    def cold_tier(self) -> Optional[ColdTier]:
+        """The configured cold backend (None when single-tier)."""
+        return self._cold
+
+    def tier_stats(self) -> Dict[str, Any]:
+        """Hot/cold occupancy and movement counters across every shard
+        (advisory reads, stats-grade like the ``stats`` property)."""
+        hot_entries = hot_bytes = cold_entries = 0
+        hot_hits = cold_hits = promotions = demotions = 0
+        for shard in self._shards.values():
+            hot_entries += len(shard.entries)
+            cold_entries += len(shard.cold)
+            hot_bytes += shard.hot_bytes
+            hot_hits += shard.stats["hot_hits"]
+            cold_hits += shard.stats["cold_hits"]
+            promotions += shard.stats["promotions"]
+            demotions += shard.stats["demotions"]
+        cold = (self._cold.stats() if self._cold is not None else
+                {"puts": 0, "gets": 0, "deletes": 0, "entries": 0, "bytes": 0})
+        return {"kind": self._cold.kind if self._cold is not None else None,
+                "budget_bytes": self._cold_budget,
+                "hot": {"entries": hot_entries, "bytes": hot_bytes},
+                "cold": cold,
+                "cold_entries": cold_entries,
+                "hot_hits": hot_hits, "cold_hits": cold_hits,
+                "promotions": promotions, "demotions": demotions}
+
     # -- elastic rebalancing ---------------------------------------------------
 
-    def add_shard(self, shard_id: Optional[int] = None) -> ShardMigration:
+    def add_shard(self, shard_id: Optional[int] = None, *,
+                  incremental: bool = True, drain: bool = True) -> ShardMigration:
         """Grow the ring by one shard (node join); migrates only the keys
-        whose owner changed, epochs preserved."""
+        whose owner changed, epochs preserved.
+
+        ``incremental=True`` (default) publishes the new ring immediately and
+        opens a :class:`MigrationWindow`: moved keys cross on first access or
+        via the inline drain, each under exactly the two involved shard locks.
+        ``drain=False`` returns with the window still open (drive it with
+        :meth:`migrate_step` / :meth:`drain_window`).  ``incremental=False``
+        is the legacy stop-the-world path (all involved locks held for the
+        whole move)."""
         with self._rebalance_lock:
+            if self._window is not None:    # one window at a time
+                self._drain_locked(self._window)
             if shard_id is None:
                 shard_id = max(self._shards) + 1 if self._shards else 0
             shard_id = int(shard_id)
             if shard_id in self._ring.ids:
                 raise ValueError(f"shard {shard_id} already on the ring")
             self._shards.setdefault(shard_id, Shard(shard_id))
-            return self._migrate(self._ring.added(shard_id),
-                                 added=(shard_id,), removed=())
+            new_ring = self._ring.added(shard_id)
+            if not incremental:
+                return self._migrate(new_ring, added=(shard_id,), removed=())
+            return self._open_window(new_ring, added=(shard_id,), removed=(),
+                                     drain=drain)
 
-    def remove_shard(self, shard_id: int) -> ShardMigration:
+    def remove_shard(self, shard_id: int, *, incremental: bool = True,
+                     drain: bool = True) -> ShardMigration:
         """Shrink the ring by one shard (node leave); its keys migrate to the
-        survivors that inherit its arcs, epochs preserved."""
+        survivors that inherit its arcs, epochs preserved.  Window semantics
+        as in :meth:`add_shard`; with ``drain=False`` the retired shard keeps
+        its un-pulled entries until the window drains."""
         with self._rebalance_lock:
+            if self._window is not None:
+                self._drain_locked(self._window)
             shard_id = int(shard_id)
             if shard_id not in self._ring.ids:
                 raise KeyError(f"shard {shard_id} is not on the ring")
             if len(self._ring) == 1:
                 raise ValueError("cannot remove the last shard")
-            return self._migrate(self._ring.removed(shard_id),
-                                 added=(), removed=(shard_id,))
+            new_ring = self._ring.removed(shard_id)
+            if not incremental:
+                return self._migrate(new_ring, added=(), removed=(shard_id,))
+            return self._open_window(new_ring, added=(), removed=(shard_id,),
+                                     drain=drain)
+
+    # -- incremental arc handoff (the migration-window state machine) ----------
+
+    def _open_window(self, new_ring: HashRing, *, added, removed,
+                     drain: bool) -> ShardMigration:
+        """Publish ``new_ring`` behind a migration window and plan the moves.
+
+        Caller holds ``_rebalance_lock``.  The window is published *before*
+        the ring so any op resolving under the new ring is guaranteed to see
+        it; ops that locked under the old ring complete at the old owner
+        (the entry is still there — moves need that same lock).  Planning
+        then snapshots each source shard's names one lock at a time: the
+        longest pause planning imposes on a concurrent op is one key-list
+        copy, not a payload move."""
+        old_ring = self._ring
+        win = MigrationWindow(old_ring, new_ring)
+        self._window = win
+        self._ring = new_ring
+        src_ids = tuple(removed) if removed else old_ring.ids
+        moved: Dict[str, Tuple[int, int]] = {}
+        epochs: Dict[str, int] = {}
+        for sid in src_ids:
+            src = self._shards[sid]
+            self._lock_shard(src)
+            try:
+                names = set(src.entries) | set(src.cold) | set(src.gen) \
+                    | set(src.directory)
+                for name in names:
+                    dst = new_ring.owner(name)
+                    if dst == sid:
+                        continue
+                    with win.lock:
+                        win.pending[name] = (sid, dst)
+                    e = src.entries.get(name) or src.cold.get(name)
+                    if e is not None:
+                        moved[name] = (sid, dst)
+                        epochs[name] = e.epoch
+            finally:
+                self._unlock_shard(src)
+        total = sum(len(self._shards[i].entries) + len(self._shards[i].cold)
+                    for i in set(old_ring.ids) | set(new_ring.ids))
+        mig = ShardMigration(tuple(added), tuple(removed), moved, epochs,
+                             total)
+        win.migration = mig
+        with win.lock:
+            win.sealed = True
+            empty = not win.pending
+        if empty:
+            self._close_window(win)
+        elif drain:
+            self._drain_locked(win)
+        return mig
+
+    @property
+    def migration_window(self) -> Optional[MigrationWindow]:
+        """The currently-open incremental handoff window, or None."""
+        return self._window
+
+    def migrate_step(self, max_entries: int = 1) -> int:
+        """Drive up to ``max_entries`` pending migrations of the open window
+        (no-op without one); returns how many names remain pending."""
+        win = self._window
+        if win is None:
+            return 0
+        for _ in range(max_entries):
+            with win.lock:
+                item = next(iter(win.pending.items()), None)
+            if item is None:
+                break
+            name, (src, dst) = item
+            self._migrate_one(win, name, src, dst, pulled=False)
+        with win.lock:
+            return len(win.pending)
+
+    def drain_window(self) -> Optional[ShardMigration]:
+        """Complete any open migration window inline (idempotent; safe to
+        race with access pulls) and return its migration report."""
+        win = self._window
+        if win is None:
+            return None
+        self._drain_locked(win)
+        return win.migration
+
+    def _drain_locked(self, win: MigrationWindow) -> None:
+        while True:
+            with win.lock:
+                item = next(iter(win.pending.items()), None)
+            if item is None:
+                return
+            name, (src, dst) = item
+            self._migrate_one(win, name, src, dst, pulled=False)
+
+    def _window_move(self, win: MigrationWindow,
+                     name: str) -> Optional[Tuple[int, int]]:
+        """``(src, dst)`` if ``name`` may still need to cross shards under
+        ``win``, else None.  Before the planner seals the pending set,
+        membership is decided by comparing the rings (a false positive just
+        costs one empty pair-locked pull)."""
+        if win.closed:
+            return None
+        if win.sealed:
+            return win.pending.get(name)
+        src = win.old_ring.owner(name)
+        dst = win.new_ring.owner(name)
+        return (src, dst) if src != dst else None
+
+    def _window_pending(self, name: str) -> bool:
+        win = self._window
+        return win is not None and self._window_move(win, name) is not None
+
+    def _settle(self, win: MigrationWindow, name: str) -> Optional[int]:
+        """Ensure ``name`` is on its new-ring owner before an op proceeds.
+
+        Returns None in the common case (nothing to move, or the pull
+        completed).  Returns the *old* owner's shard id when this thread is
+        already inside an operation holding that shard's lock (the cache
+        composes store ops re-entrantly): pulling here would acquire the
+        pair out of order, and serving in place is correct — the entry is
+        still the single authoritative copy, and no other thread can move
+        it while this thread holds the lock."""
+        mv = self._window_move(win, name)
+        if mv is None:
+            return None
+        if self._shards[mv[0]].lock._is_owned():
+            return mv[0]
+        self._migrate_one(win, name, mv[0], mv[1], pulled=True)
+        return None
+
+    def _migrate_one(self, win: MigrationWindow, name: str, src_id: int,
+                     dst_id: int, *, pulled: bool) -> None:
+        """Move one name across shards under exactly the two involved locks
+        (sorted id order; the checker's handoff exemption).  Entry (hot or
+        cold index), delete-era generation and directory record cross
+        together, so a concurrent cache write never sees the entry without
+        its holders.  Idempotent: a racer that loses finds nothing at the
+        source and only drops the pending record."""
+        if src_id == dst_id:
+            return
+        src, dst = self._shards[src_id], self._shards[dst_id]
+        first, second = (src, dst) if src.id < dst.id else (dst, src)
+        ck = self.checker
+        checking = stepcheck.CHECKING and ck.enabled
+        if checking:
+            ck.handoff_begin()
+        self._lock_shard(first)
+        self._lock_shard(second)
+        try:
+            hook = self._migrate_entry_hook
+            if hook is not None:
+                hook(name)
+            nb = 0
+            e = src.entries.pop(name, None)
+            if e is not None:
+                dst.entries[name] = e
+                nb = e.hot_nbytes or _nbytes(e.value)
+                if self._cold is not None:
+                    src.hot_bytes -= e.hot_nbytes
+                    dst.hot_bytes += e.hot_nbytes
+            else:
+                e = src.cold.pop(name, None)
+                if e is not None:
+                    dst.cold[name] = e
+                    nb = e.cold_bytes
+            moved_entry = e is not None
+            if moved_entry:
+                src.stats["migrated_out"] += 1
+                src.stats["migrated_bytes"] += nb
+                dst.stats["migrated_in"] += 1
+            g = src.gen.pop(name, None)
+            if g is not None:
+                dst.gen[name] = max(dst.gen.get(name, 0), g)
+            d = src.directory.pop(name, None)
+            if d is not None:
+                dst.directory.setdefault(name, set()).update(d)
+        finally:
+            self._unlock_shard(second)
+            self._unlock_shard(first)
+            if checking:
+                ck.handoff_end()
+        closed = False
+        with win.lock:
+            win.pending.pop(name, None)
+            if moved_entry:
+                win.entries_moved += 1
+                win.bytes_moved += nb
+                if pulled:
+                    win.pulled += 1
+            if win.sealed and not win.pending and not win.closed:
+                win.closed = True
+                closed = True
+        trc = self.tracer
+        if telemetry.TRACING and trc.enabled and moved_entry:
+            trc.count("migration.entries")
+            trc.count("migration.bytes", nb)
+        if closed:
+            self._close_window(win)
+
+    def _close_window(self, win: MigrationWindow) -> None:
+        t_close = time.perf_counter()
+        dt = t_close - win.t_open
+        m = win.migration
+        if m is not None:
+            m.bytes_moved = win.bytes_moved
+            m.window_s = dt
+            m.pulled = win.pulled
+        self._note_migration(windows=1, entries_moved=win.entries_moved,
+                             bytes_moved=win.bytes_moved, pulled=win.pulled,
+                             window_s=dt)
+        self._window = None
+        trc = self.tracer
+        if telemetry.TRACING and trc.enabled:
+            trc.add_span("migration", "store.migration_window", win.t_open,
+                         t_close, {"entries": win.entries_moved,
+                                   "bytes": win.bytes_moved,
+                                   "pulled": win.pulled})
+
+    def _note_migration(self, **deltas) -> None:
+        with self._mig_lock:
+            for key, v in deltas.items():
+                self._migration_totals[key] += v
+
+    def migration_totals(self) -> Dict[str, Any]:
+        """Cumulative rebalancing cost across this store's lifetime (both
+        window and stop-the-world paths), plus the live window state —
+        the ``rebalance`` section of ``ft.metrics_payload``."""
+        with self._mig_lock:
+            out: Dict[str, Any] = dict(self._migration_totals)
+        win = self._window
+        out["open"] = win is not None and not win.closed
+        out["pending"] = win.remaining if win is not None else 0
+        return out
 
     def _migrate(self, new_ring: HashRing, *, added, removed) -> ShardMigration:
         """Move every entry/generation/directory record whose owner changed.
@@ -402,12 +919,14 @@ class ShardedStore:
         checking = stepcheck.CHECKING and ck.enabled
         if checking:
             ck.rebalance_begin()
+        t0 = time.perf_counter()
         for s in shards:
             self._lock_shard(s)
         try:
             moved: Dict[str, Tuple[int, int]] = {}
             epochs: Dict[str, int] = {}
-            total = sum(len(s.entries) for s in shards)
+            bytes_moved = 0
+            total = sum(len(s.entries) + len(s.cold) for s in shards)
             for s in shards:
                 for name in list(s.entries):
                     owner = new_ring.owner(name)
@@ -416,13 +935,39 @@ class ShardedStore:
                     dst = self._shards[owner]
                     e = s.entries.pop(name)
                     dst.entries[name] = e          # epoch rides with the entry
+                    nb = e.hot_nbytes or _nbytes(e.value)
+                    if self._cold is not None:
+                        s.hot_bytes -= e.hot_nbytes
+                        dst.hot_bytes += e.hot_nbytes
                     moved[name] = (s.id, owner)
                     epochs[name] = e.epoch
+                    bytes_moved += nb
                     if name in s.gen:
                         dst.gen[name] = max(dst.gen.get(name, 0), s.gen.pop(name))
                     if name in s.directory:
                         dst.directory[name] = s.directory.pop(name)
                     s.stats["migrated_out"] += 1
+                    s.stats["migrated_bytes"] += nb
+                    dst.stats["migrated_in"] += 1
+                # cold entries move by index record only — the tier keys
+                # payloads by (globally unique) name, so a shard handoff
+                # never touches the backend
+                for name in list(s.cold):
+                    owner = new_ring.owner(name)
+                    if owner == s.id:
+                        continue
+                    dst = self._shards[owner]
+                    e = s.cold.pop(name)
+                    dst.cold[name] = e
+                    moved[name] = (s.id, owner)
+                    epochs[name] = e.epoch
+                    bytes_moved += e.cold_bytes
+                    if name in s.gen:
+                        dst.gen[name] = max(dst.gen.get(name, 0), s.gen.pop(name))
+                    if name in s.directory:
+                        dst.directory[name] = s.directory.pop(name)
+                    s.stats["migrated_out"] += 1
+                    s.stats["migrated_bytes"] += e.cold_bytes
                     dst.stats["migrated_in"] += 1
                 # delete-era generations of names with no live entry follow
                 # the ring too: a redeclare after migration must still start
@@ -438,8 +983,12 @@ class ShardedStore:
                     if owner != s.id:
                         self._shards[owner].directory[name] = s.directory.pop(name)
             self._ring = new_ring   # publish while every lock is still held
+            window_s = time.perf_counter() - t0
+            self._note_migration(windows=1, entries_moved=len(moved),
+                                 bytes_moved=bytes_moved, pulled=0,
+                                 window_s=window_s)
             return ShardMigration(tuple(added), tuple(removed), moved, epochs,
-                                  total)
+                                  total, bytes_moved, window_s, 0)
         finally:
             for s in reversed(shards):
                 self._unlock_shard(s)
@@ -488,10 +1037,12 @@ class ShardedStore:
     @staticmethod
     def _fresh_epoch(shard: Shard, name: str) -> int:
         """Starting epoch for a (re-)declared name: strictly above every epoch
-        the name has ever had, so stale replicas can never validate."""
+        the name has ever had (hot or demoted), so stale replicas can never
+        validate."""
         prev = shard.gen.get(name, 0)
-        if name in shard.entries:
-            prev = max(prev, shard.entries[name].epoch + 1)
+        e = shard.entries.get(name) or shard.cold.get(name)
+        if e is not None:
+            prev = max(prev, e.epoch + 1)
         return prev
 
     def def_global(self, name: str, value, *, spec: Optional[P] = None) -> str:
@@ -502,10 +1053,10 @@ class ShardedStore:
                 GLOBALS_OBJECT_ID, self._num_words(value.shape, value.dtype))
         placed = self._place(value, spec)
         with self.locked_owner(name) as shard:
-            shard.entries[name] = GlobalEntry(name, slot, self._sharding(spec),
-                                              placed,
-                                              epoch=self._fresh_epoch(shard, name),
-                                              spec=spec)
+            self._install(shard, GlobalEntry(name, slot, self._sharding(spec),
+                                             placed,
+                                             epoch=self._fresh_epoch(shard, name),
+                                             spec=spec))
         return name
 
     def new_array(self, name: str, shape, dtype=jnp.float32, *, spec: Optional[P] = None) -> str:
@@ -515,10 +1066,10 @@ class ShardedStore:
             slot = self._alloc.alloc_field(oid, self._num_words(shape, dtype))
         placed = self._place(jnp.zeros(shape, dtype), spec)
         with self.locked_owner(name) as shard:
-            shard.entries[name] = GlobalEntry(name, slot, self._sharding(spec),
-                                              placed,
-                                              epoch=self._fresh_epoch(shard, name),
-                                              spec=spec)
+            self._install(shard, GlobalEntry(name, slot, self._sharding(spec),
+                                             placed,
+                                             epoch=self._fresh_epoch(shard, name),
+                                             spec=spec))
         return name
 
     def new_object(self, name: str, fields: Dict[str, Any], *, specs: Optional[Dict[str, P]] = None) -> str:
@@ -534,18 +1085,23 @@ class ShardedStore:
             oid = self._alloc.new_object()
             slot = self._alloc.alloc_field(oid, words)
         with self.locked_owner(name) as shard:
-            shard.entries[name] = GlobalEntry(name, slot, None, placed,
-                                              epoch=self._fresh_epoch(shard, name),
-                                              field_specs=dict(specs))
+            self._install(shard, GlobalEntry(name, slot, None, placed,
+                                             epoch=self._fresh_epoch(shard, name),
+                                             field_specs=dict(specs)))
         return name
 
     def delete(self, name: str) -> None:
         """``DelArray`` / ``DelObj``.  Records the retired epoch so a later
         re-declaration of the same name starts strictly past it, and fires
         the registered delete hooks (cache replica + directory teardown)
-        under the owning shard's lock."""
+        under the owning shard's lock.  A demoted entry is deleted without
+        loading its payload back — only the tier slot is reclaimed."""
         with self.locked_entry(name) as (shard, e):
-            del shard.entries[name]
+            if shard.entries.pop(name, None) is not None:
+                if self._cold is not None:
+                    shard.hot_bytes -= e.hot_nbytes
+            elif shard.cold.pop(name, None) is not None:
+                self._cold.delete(name)
             shard.gen[name] = max(shard.gen.get(name, 0), e.epoch + 1)
             shard.directory.pop(name, None)
             self._fire_delete_hooks(name)
@@ -562,6 +1118,9 @@ class ShardedStore:
         tracing = telemetry.TRACING and trc.enabled
         t0 = time.perf_counter() if tracing else 0.0
         with self.locked_entry(name, owner) as (shard, e):
+            if self._cold is not None and e.value is None:
+                self._promote(shard, e)
+                self._maybe_demote(shard)
             shard.stats["get"] += 1
             shard.stats["bytes_get"] += _nbytes(e.value)
             shard.stats["transfers"] += self._transfer_count(e.value)
@@ -576,7 +1135,12 @@ class ShardedStore:
         tracing = telemetry.TRACING and trc.enabled
         t0 = time.perf_counter() if tracing else 0.0
         with self.locked_entry(name, owner) as (shard, e):
-            if isinstance(e.value, dict):
+            if self._cold is not None and e.value is None:
+                # Set overwrites the whole value: reclaim the tier slot but
+                # skip loading the payload it is about to replace
+                self._promote(shard, e, load=False)
+            if isinstance(e.value, dict) or (e.value is None
+                                             and isinstance(value, dict)):
                 specs = e.field_specs or {}
                 e.value = {k: self._place(jnp.asarray(v), specs.get(k))
                            for k, v in value.items()}
@@ -587,6 +1151,8 @@ class ShardedStore:
                 e.value = value
             if bump_epoch:
                 e.epoch += 1
+            if self._cold is not None:
+                self._note_resize(shard, e)
             shard.stats["set"] += 1
             shard.stats["bytes_set"] += _nbytes(e.value)
             shard.stats["transfers"] += self._transfer_count(e.value)
@@ -658,8 +1224,12 @@ class ShardedStore:
         tracing = telemetry.TRACING and trc.enabled
         t0 = time.perf_counter() if tracing else 0.0
         with self.locked_entry(name, owner) as (shard, e):
+            if self._cold is not None and e.value is None:
+                self._promote(shard, e)
             e.value = self._place(jnp.asarray(e.value) + amount, e.spec)
             e.epoch += 1
+            if self._cold is not None:
+                self._note_resize(shard, e)
             shard.stats["inc"] += 1
             shard.stats["bytes_set"] += _nbytes(e.value)
             shard.stats["transfers"] += self._transfer_count(e.value)
@@ -677,11 +1247,14 @@ class ShardedStore:
             return e.slot.address
 
     def names(self):
+        # every shard, not just ring members: during an open remove-window
+        # the retired shard still holds its un-pulled entries (an entry
+        # lives in exactly one shard dict, so no name appears twice)
         out: List[str] = []
-        for sid in self._ring.ids:
-            shard = self._shards[sid]
+        for shard in self._shards.values():
             with shard.lock:
                 out.extend(shard.entries)
+                out.extend(shard.cold)
         return out
 
     # -- stats / introspection -------------------------------------------------
@@ -704,7 +1277,7 @@ class ShardedStore:
             shard = self._shards[sid]
             with shard.lock:
                 row = dict(shard.stats)
-                row["names"] = len(shard.entries)
+                row["names"] = len(shard.entries) + len(shard.cold)
             out[sid] = row
         return out
 
@@ -725,6 +1298,7 @@ class ShardedStore:
         the flat store; mutate through the store API, not this view)."""
         merged: Dict[str, GlobalEntry] = {}
         for shard in self._shards.values():
+            merged.update(shard.cold)
             merged.update(shard.entries)
         return merged
 

@@ -396,12 +396,17 @@ def as_tracer(trace) -> Tracer:
 #: form of the raw per-shard ``Shard.stats`` / ``ShardedStore.stats`` dicts,
 #: whose legacy singular-verb keys remain available as deprecated views.
 STORE_METRIC_KEYS = ("gets", "sets", "incs", "bytes_read", "bytes_written",
-                     "transfers", "migrated_in", "migrated_out")
+                     "transfers", "migrated_in", "migrated_out",
+                     "migrated_bytes", "hot_hits", "cold_hits",
+                     "promotions", "demotions")
 
 _STORE_KEY_MAP = {"get": "gets", "set": "sets", "inc": "incs",
                   "bytes_get": "bytes_read", "bytes_set": "bytes_written",
                   "transfers": "transfers", "migrated_in": "migrated_in",
-                  "migrated_out": "migrated_out"}
+                  "migrated_out": "migrated_out",
+                  "migrated_bytes": "migrated_bytes",
+                  "hot_hits": "hot_hits", "cold_hits": "cold_hits",
+                  "promotions": "promotions", "demotions": "demotions"}
 
 #: Canonical cache counter keys (``CacheStats.as_dict()``).
 CACHE_METRIC_KEYS = ("hits", "misses", "invalidations", "write_messages",
@@ -409,7 +414,7 @@ CACHE_METRIC_KEYS = ("hits", "misses", "invalidations", "write_messages",
 
 #: Top-level key set of ``Session.metrics()``.
 SESSION_METRIC_KEYS = ("backend", "store", "cache", "wire_traffic", "shards",
-                       "trace")
+                       "tiers", "trace")
 
 
 def normalize_store_stats(raw: Dict[str, int]) -> Dict[str, Any]:

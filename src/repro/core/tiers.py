@@ -1,0 +1,232 @@
+"""step.tiers — pluggable cold storage beneath the sharded DSM.
+
+STEP's store (§5.1) assumes every entry fits in per-shard RAM.  The
+memory-disaggregated object-store design (PAPERS.md) splits that assumption:
+a small *hot* tier absorbs the working set at memory speed while a *cold*
+tier — host memory owned by another process, local disk, eventually a
+remote object store — holds everything else, with promotion on access.
+
+This module is the cold half.  A :class:`ColdTier` stores opaque *value
+payloads* keyed by DSM name; all entry metadata (epoch, delete-era
+generation, address slot, placement spec) stays in memory on the owning
+:class:`~repro.core.shards.Shard`, so validation and coherence never touch
+the cold backend.  Two backends ship:
+
+* :class:`HostMemTier` — an in-process dict of host (numpy) pytrees.  The
+  degenerate-but-useful case: entries leave the accelerator/hot dict but
+  stay a pointer-chase away, which is what a disaggregated-memory node
+  looks like from the store's side.
+* :class:`DiskTier` — one pickled host pytree per name under a spill
+  directory (content-addressed file names, so DSM names need not be
+  filesystem-safe).  Bigger-than-RAM namespaces land here.
+
+Both are thread-safe behind one internal leaf lock (tier calls happen under
+the owning shard's lock and never call back into store code).  Payloads are
+converted to host numpy on the way in — a demoted value must not pin device
+memory, and pickling device arrays would be meaningless anyway.
+
+``resolve_cold_tier`` maps the ``Session(cold_tier=...)`` argument
+(``"host" | "disk" | ColdTier instance | None``) onto a backend instance.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.core.addressing import ring_hash
+
+
+def host_payload(value: Any) -> Any:
+    """Convert a store value (jax array or pytree of arrays) to host numpy —
+    the representation every cold backend stores."""
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), value)
+
+
+def payload_nbytes(value: Any) -> int:
+    """Size of a host payload in bytes (the unit of tier budgets/stats)."""
+    return int(sum(np.asarray(l).nbytes for l in jax.tree.leaves(value)))
+
+
+def _fresh_tier_stats() -> Dict[str, int]:
+    return {"puts": 0, "gets": 0, "deletes": 0, "entries": 0, "bytes": 0}
+
+
+@runtime_checkable
+class ColdTier(Protocol):
+    """Where demoted value payloads live.  Keys are DSM names (globally
+    unique across the store, so a payload never needs re-keying when its
+    entry migrates between shards).  Implementations must be thread-safe
+    and must not call back into store/cache code (tier locks are leaves)."""
+
+    kind: str
+
+    def put(self, name: str, value: Any) -> int:
+        """Store ``value`` (a host pytree) under ``name``; returns the number
+        of bytes now held for the name (replacing any previous payload)."""
+        ...
+
+    def get(self, name: str) -> Any:
+        """Load the payload for ``name`` (KeyError if absent)."""
+        ...
+
+    def delete(self, name: str) -> None:
+        """Drop the payload for ``name`` (no-op if absent)."""
+        ...
+
+    def stats(self) -> Dict[str, int]:
+        """``{"puts", "gets", "deletes", "entries", "bytes"}`` counters."""
+        ...
+
+    def close(self) -> None:
+        """Release backend resources (spill files, handles)."""
+        ...
+
+
+class HostMemTier:
+    """In-process host-memory cold tier: a dict of numpy pytrees."""
+
+    kind = "host"
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._data: Dict[str, Any] = {}
+        self._sizes: Dict[str, int] = {}
+        self._stats = _fresh_tier_stats()
+
+    def put(self, name: str, value: Any) -> int:
+        payload = host_payload(value)
+        nb = payload_nbytes(payload)
+        with self._lock:
+            self._stats["bytes"] += nb - self._sizes.get(name, 0)
+            if name not in self._data:
+                self._stats["entries"] += 1
+            self._data[name] = payload
+            self._sizes[name] = nb
+            self._stats["puts"] += 1
+        return nb
+
+    def get(self, name: str) -> Any:
+        with self._lock:
+            self._stats["gets"] += 1
+            return self._data[name]
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            if name in self._data:
+                del self._data[name]
+                self._stats["entries"] -= 1
+                self._stats["bytes"] -= self._sizes.pop(name)
+                self._stats["deletes"] += 1
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._stats)
+
+    def close(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self._sizes.clear()
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"HostMemTier(entries={self._stats['entries']})"
+
+
+class DiskTier:
+    """On-disk cold tier: one pickled host pytree per name under ``root``.
+
+    File names are the blake2b ring hash of the DSM name (content-addressed),
+    so arbitrary names map onto the filesystem safely.  ``root=None`` spills
+    into a fresh temporary directory removed on :meth:`close` (and
+    best-effort at interpreter exit)."""
+
+    kind = "disk"
+
+    def __init__(self, root: Optional[str] = None):
+        self._owns_root = root is None
+        self.root = root or tempfile.mkdtemp(prefix="step-cold-")
+        os.makedirs(self.root, exist_ok=True)
+        self._lock = threading.Lock()
+        self._paths: Dict[str, str] = {}
+        self._sizes: Dict[str, int] = {}
+        self._stats = _fresh_tier_stats()
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.root, f"{ring_hash(name):016x}.pkl")
+
+    def put(self, name: str, value: Any) -> int:
+        payload = host_payload(value)
+        nb = payload_nbytes(payload)
+        path = self._path(name)
+        blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+        with self._lock:
+            with open(path, "wb") as fh:
+                fh.write(blob)
+            self._stats["bytes"] += nb - self._sizes.get(name, 0)
+            if name not in self._paths:
+                self._stats["entries"] += 1
+            self._paths[name] = path
+            self._sizes[name] = nb
+            self._stats["puts"] += 1
+        return nb
+
+    def get(self, name: str) -> Any:
+        with self._lock:
+            path = self._paths[name]
+            self._stats["gets"] += 1
+            with open(path, "rb") as fh:
+                return pickle.load(fh)
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            path = self._paths.pop(name, None)
+            if path is None:
+                return
+            self._stats["entries"] -= 1
+            self._stats["bytes"] -= self._sizes.pop(name)
+            self._stats["deletes"] += 1
+            try:
+                os.unlink(path)
+            except OSError:  # pragma: no cover - already gone
+                pass
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._stats)
+
+    def close(self) -> None:
+        with self._lock:
+            self._paths.clear()
+            self._sizes.clear()
+            if self._owns_root:
+                shutil.rmtree(self.root, ignore_errors=True)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"DiskTier(root={self.root!r}, entries={self._stats['entries']})"
+
+
+def resolve_cold_tier(cold_tier) -> Optional[ColdTier]:
+    """Map the ``cold_tier=`` constructor argument onto a backend: ``None``
+    keeps the store single-tier, ``"host"``/``"disk"`` build the bundled
+    backends, and any :class:`ColdTier`-shaped object is adopted as-is."""
+    if cold_tier is None:
+        return None
+    if isinstance(cold_tier, str):
+        if cold_tier == "host":
+            return HostMemTier()
+        if cold_tier == "disk":
+            return DiskTier()
+        raise ValueError(
+            f"cold_tier must be None, 'host', 'disk' or a ColdTier instance, "
+            f"got {cold_tier!r}")
+    if isinstance(cold_tier, ColdTier):
+        return cold_tier
+    raise TypeError(f"not a ColdTier: {cold_tier!r} (needs put/get/delete/"
+                    "stats/close and a kind attribute)")

@@ -43,7 +43,11 @@ def rebalance_shards(store, *, join: Sequence[int] = (), leave: Sequence[int] = 
     shards hand their arcs to the survivors.  Only the ~1/S of keys whose arc
     changed owner migrate — each with its epoch, delete-era generation and
     watcher-directory record intact, so no cache replica goes stale and no
-    deleted-era name can resurface after the move.  Returns the merged
+    deleted-era name can resurface after the move.  Since step.tiers each
+    topology change runs as an *incremental* migration window (readers and
+    writers keep flowing; each moved arc settles one entry at a time), and
+    the returned plan records the window cost — ``bytes_moved`` and
+    ``window_s`` — alongside the key map.  Returns the merged
     :class:`~repro.core.shards.ShardMigration` (or ``None`` if the topology
     did not change — e.g. a dead node that never had a shard, or the last
     shard, which can't be removed).
@@ -72,7 +76,8 @@ def _merge_migrations(a, b):
         moved[name] = (moved[name][0] if name in moved else src, dst)
         epochs[name] = b.epochs[name]
     return type(b)(a.added + b.added, a.removed + b.removed, moved, epochs,
-                   b.total_names)
+                   b.total_names, a.bytes_moved + b.bytes_moved,
+                   a.window_s + b.window_s, a.pulled + b.pulled)
 
 
 def plan_recovery(failed_nodes: Sequence[int], all_nodes: Sequence[int],
@@ -120,6 +125,12 @@ def session_recovery(session, failed_nodes: Sequence[int], mode: str = "multi",
     if session.backend.kind != "host":
         raise ValueError("session_recovery drills node failure on the host "
                          "backend; SPMD recovery goes through elastic_restore")
+    # a crash can land mid-migration: the incremental window lives on the
+    # store (which survives the session), so recovery first drains any open
+    # window to completion — every entry settles at its ring owner exactly
+    # once (moves are idempotent), nothing is lost or duplicated
+    if session.store.migration_window is not None:
+        session.store.drain_window()
     pool = session.backend.pool
     tids_by_node = {n: [n * pool.threads_per_node + i
                         for i in range(pool.threads_per_node)]

@@ -36,6 +36,9 @@ def metrics_payload(session) -> Dict[str, Any]:
             "count": sum(w["count"] for w in waits),
         },
         "wire_traffic": session.wire_traffic(),
+        # lifetime rebalance totals (windows, entries/bytes moved, reader
+        # pulls, open-window flag) — lets the monitor see a live migration
+        "rebalance": session.store.migration_totals(),
     }
 
 

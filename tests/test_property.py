@@ -63,3 +63,28 @@ def test_accumulator_linearity(seed):
     lhs = accumulate_ref(jnp.stack([jnp.asarray(a + b)]))
     rhs = accumulate_ref(jnp.stack([jnp.asarray(a)])) + accumulate_ref(jnp.stack([jnp.asarray(b)]))
     np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.text(alphabet="abcdefgh", min_size=1, max_size=8),
+                min_size=1, max_size=20, unique=True),
+       st.integers(0, 25), st.integers(0, 10 ** 6))
+def test_crash_mid_migration_loses_and_duplicates_nothing(keys, steps, seed):
+    """step.tiers satellite: kill a session inside an open migration window
+    at an arbitrary drain point — session_recovery must complete the handoff
+    with every key present exactly once and every value intact."""
+    from repro.core import Session
+    from repro.ft import session_recovery
+
+    sess = Session(backend="host", n_nodes=2, threads_per_node=1, shards=2)
+    vals = {f"hz_{k}": float((seed + i) % 977)
+            for i, k in enumerate(keys)}
+    for k, v in vals.items():
+        sess.store.def_global(k, jnp.full((4,), v))
+    sess.store.add_shard(9, drain=False)             # window opens
+    sess.store.migrate_step(steps)                   # partial drain
+    plan, new_sess = session_recovery(sess, [1])     # crash strikes here
+    assert new_sess.store.migration_window is None
+    assert sorted(new_sess.store.names()) == sorted(vals)
+    for k, v in vals.items():
+        np.testing.assert_allclose(np.asarray(new_sess.store.get(k)), v)

@@ -89,6 +89,23 @@ def test_empty_ring_owner_raises_value_error():
         emptied.owner("x")
 
 
+def test_empty_ring_store_ops_raise_value_error():
+    # satellite: the mutating ops surface the ring's clear ValueError too —
+    # set/mget/inc on a store whose ring emptied must match owner()'s
+    # contract, not escape as a KeyError or ZeroDivisionError
+    store = ShardedStore(shards=1)
+    store.def_global("a", jnp.zeros(4))
+    store._ring = HashRing([])            # simulate the last arc vanishing
+    with pytest.raises(ValueError, match="empty hash ring"):
+        store.set("a", jnp.ones(4))
+    with pytest.raises(ValueError, match="empty hash ring"):
+        store.mget(["a"])
+    with pytest.raises(ValueError, match="empty hash ring"):
+        store.inc("a", 1.0)
+    with pytest.raises(ValueError, match="empty hash ring"):
+        store.get("a")
+
+
 def test_ring_version_bumps_on_topology_change():
     ring = HashRing([0, 1])
     assert ring.version == 0

@@ -1,0 +1,471 @@
+"""step.tiers — tiered shard storage + epoch-aware promotion + live
+incremental rebalancing.
+
+The tentpole contract: a ``ShardedStore`` with a cold tier spills
+least-recently-used entries past the per-shard hot-byte budget and promotes
+them back (epoch-preserving, so cache replicas stay valid) on access; a ring
+join/leave runs as an *incremental* migration window — the new ring is
+published immediately, each moved key crosses under exactly the two involved
+shard locks, readers/writers keep flowing, and no operation ever observes a
+stale value.  With ``cold_tier=None`` (the default) every path stays
+single-tier at one extra branch per op.
+"""
+
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DiskTier,
+    DSMCache,
+    GlobalStore,
+    HostMemTier,
+    Session,
+    ShardedStore,
+)
+from repro.core.tiers import resolve_cold_tier
+from repro.ft import metrics_payload, rebalance_shards, session_recovery
+
+ONE_KB = (256,)  # float32 (256,) == 1024 bytes
+
+
+def _fill(store, names, base=0.0, shape=ONE_KB):
+    for i, n in enumerate(names):
+        store.def_global(n, jnp.full(shape, base + i))
+
+
+# -- cold tiers ---------------------------------------------------------------
+
+
+def test_resolve_cold_tier_contract():
+    assert resolve_cold_tier(None) is None
+    assert isinstance(resolve_cold_tier("host"), HostMemTier)
+    disk = resolve_cold_tier("disk")
+    assert isinstance(disk, DiskTier)
+    disk.close()
+    tier = HostMemTier()
+    assert resolve_cold_tier(tier) is tier
+    with pytest.raises(ValueError, match="cold_tier"):
+        resolve_cold_tier("tape")
+    with pytest.raises(TypeError, match="ColdTier"):
+        resolve_cold_tier(object())
+
+
+def test_budget_demotes_lru_first_and_counts():
+    store = ShardedStore(shards=1, cold_tier="host", cold_budget=2 * 1024)
+    _fill(store, [f"d{i}" for i in range(4)])        # 4 KB hot demand
+    ts = store.tier_stats()
+    assert ts["kind"] == "host" and ts["budget_bytes"] == 2 * 1024
+    assert ts["hot"]["entries"] == 2 and ts["hot"]["bytes"] == 2 * 1024
+    assert ts["cold_entries"] == 2 == ts["demotions"]
+    assert ts["cold"] == {"puts": 2, "gets": 0, "deletes": 0,
+                          "entries": 2, "bytes": 2 * 1024}
+    # insertion order is LRU order: the two oldest entries were spilled
+    shard = store._shards[0]
+    assert sorted(shard.cold) == ["d0", "d1"]
+    # a read touches (MRU-bumps) a hot entry; the next demand spills the
+    # other hot entry, not the one just used
+    np.testing.assert_allclose(np.asarray(store.get("d2")), 2.0)
+    store.def_global("d4", jnp.full(ONE_KB, 4.0))
+    assert "d3" in store._shards[0].cold and "d2" in store._shards[0].entries
+
+
+def test_promotion_preserves_epoch_and_value():
+    store = ShardedStore(shards=1, cold_tier="host", cold_budget=1024)
+    store.def_global("p", jnp.full(ONE_KB, 1.0))
+    store.set("p", jnp.full(ONE_KB, 2.0))
+    epoch = store._shards[0].entries["p"].epoch
+    _fill(store, ["f0", "f1"], base=10.0)            # push "p" cold
+    cold_entry = store._shards[0].cold["p"]
+    assert cold_entry.value is None and cold_entry.epoch == epoch
+    np.testing.assert_allclose(np.asarray(store.get("p")), 2.0)  # promote
+    assert store._shards[0].entries["p"].epoch == epoch          # unchanged
+    ts = store.tier_stats()
+    assert ts["promotions"] >= 1 and ts["cold_hits"] >= 1
+
+
+def test_epoch_validated_cache_replica_survives_demote_promote_cycle():
+    store = GlobalStore(shards=1, cold_tier="host", cold_budget=1024)
+    cache = DSMCache(store, n_nodes=2)
+    store.def_global("m", jnp.full(ONE_KB, 3.0))
+    np.testing.assert_allclose(cache.read(0, "m"), 3.0)          # replica
+    _fill(store, ["g0", "g1"], base=5.0)                         # demote "m"
+    assert "m" in store._shards[0].cold
+    # the replica's epoch still matches the (cold) entry — a cached read is
+    # a hit and never forces a promotion
+    hits, promos = cache.stats.hits, store.tier_stats()["promotions"]
+    np.testing.assert_allclose(cache.read(0, "m"), 3.0)
+    assert cache.stats.hits == hits + 1
+    assert store.tier_stats()["promotions"] == promos
+    # a write promotes (slot reclaim, no payload load), bumps the epoch, and
+    # invalidates the replica exactly as in the single-tier store
+    cache.write(1, "m", jnp.full(ONE_KB, 4.0))
+    np.testing.assert_allclose(cache.read(0, "m"), 4.0)
+
+
+def test_set_and_inc_operate_on_cold_entries():
+    store = ShardedStore(shards=1, cold_tier="host", cold_budget=1024)
+    store.def_global("s", jnp.full(ONE_KB, 1.0))
+    store.def_global("i", jnp.full(ONE_KB, 1.0))
+    store.def_global("hot", jnp.full(ONE_KB, 0.0))   # spills s and i
+    shard = store._shards[0]
+    assert {"s", "i"} <= set(shard.cold)
+    store.set("s", jnp.full(ONE_KB, 9.0))            # overwrite: no load
+    store.inc("i", 1.0)                              # rmw: loads then incs
+    np.testing.assert_allclose(np.asarray(store.get("s")), 9.0)
+    np.testing.assert_allclose(np.asarray(store.get("i")), 2.0)
+
+
+def test_delete_reclaims_cold_payload():
+    tier = HostMemTier()
+    store = ShardedStore(shards=1, cold_tier=tier, cold_budget=1024)
+    _fill(store, ["a", "b"])                         # "a" goes cold
+    assert tier.stats()["entries"] == 1
+    store.delete("a")
+    assert tier.stats()["entries"] == 0
+    assert "a" not in store._shards[0].cold
+    with pytest.raises(KeyError):
+        store.get("a")
+
+
+def test_disk_tier_roundtrip_and_close_removes_spill_dir():
+    import os
+    store = ShardedStore(shards=1, cold_tier="disk", cold_budget=1024)
+    _fill(store, ["x0", "x1", "x2"])
+    tier = store.cold_tier
+    root = tier.root
+    assert os.path.isdir(root) and tier.stats()["entries"] == 2
+    np.testing.assert_allclose(np.asarray(store.get("x0")), 0.0)
+    np.testing.assert_allclose(np.asarray(store.get("x1")), 1.0)
+    tier.close()
+    assert not os.path.exists(root)                  # owned tempdir removed
+
+
+def test_object_entries_round_trip_through_cold_tier():
+    store = ShardedStore(shards=1, cold_tier="host", cold_budget=1024)
+    store.new_object("obj", {"w": jnp.full(ONE_KB, 1.5), "b": jnp.zeros(4)})
+    store.def_global("pad", jnp.full(ONE_KB, 0.0))
+    assert "obj" in store._shards[0].cold
+    got = store.get("obj")
+    np.testing.assert_allclose(np.asarray(got["w"]), 1.5)
+    np.testing.assert_allclose(np.asarray(got["b"]), 0.0)
+
+
+def test_default_path_keeps_single_tier_shape():
+    store = ShardedStore(shards=2)
+    _fill(store, [f"n{i}" for i in range(4)])
+    ts = store.tier_stats()
+    assert ts["kind"] is None and ts["budget_bytes"] is None
+    assert ts["cold_entries"] == 0 == ts["demotions"] == ts["promotions"]
+    assert ts["hot"]["bytes"] == 0                   # untracked when untiered
+    assert store.cold_tier is None
+    for shard in store._shards.values():
+        assert shard.cold == {}
+
+
+def test_session_plumbs_cold_tier_and_reports_tiers_metric():
+    sess = Session(backend="host", n_nodes=1, threads_per_node=2,
+                   shards=2, cold_tier="host", cold_budget=4 * 1024)
+    refs = [sess.new_array(f"t{i}", ONE_KB) for i in range(12)]
+    for i, r in enumerate(refs):
+        r.set(jnp.full(ONE_KB, float(i)))
+    m = sess.metrics()
+    assert m["tiers"]["kind"] == "host"
+    assert m["tiers"]["demotions"] > 0
+    assert m["tiers"]["migration"] == sess.store.migration_totals()
+    for i, r in enumerate(refs):                     # everything still exact
+        np.testing.assert_allclose(np.asarray(r.get()), float(i))
+
+
+# -- incremental migration windows --------------------------------------------
+
+
+def test_add_shard_drains_inline_by_default_and_records_cost():
+    store = ShardedStore(shards=2)
+    names = [f"k{i}" for i in range(32)]
+    _fill(store, names)
+    mig = store.add_shard(7)
+    assert store.migration_window is None            # drained before return
+    assert mig.added == (7,) and len(mig.moved) > 0
+    assert mig.bytes_moved == 1024 * len(mig.moved)
+    assert mig.window_s > 0.0 and mig.pulled == 0
+    for i, n in enumerate(names):
+        np.testing.assert_allclose(np.asarray(store.get(n)), float(i))
+    totals = store.migration_totals()
+    assert totals["windows"] == 1 and totals["open"] is False
+    assert totals["bytes_moved"] == mig.bytes_moved
+
+
+def test_open_window_settles_reads_writes_then_closes():
+    store = ShardedStore(shards=2)
+    names = [f"w{i}" for i in range(32)]
+    _fill(store, names)
+    store.add_shard(9, drain=False)
+    win = store.migration_window
+    assert win is not None and win.remaining > 0
+    before = win.remaining
+    # every op settles its own key first — reads are never stale, and each
+    # access shrinks the pending set by at most that one key
+    for i, n in enumerate(names):
+        np.testing.assert_allclose(np.asarray(store.get(n)), float(i))
+    assert store.migration_window is None or store.migration_window.remaining < before
+    left = store.migrate_step(10 ** 6)
+    assert left == 0 and store.migration_window is None
+    totals = store.migration_totals()
+    assert totals["pulled"] > 0                      # reads did real handoffs
+    assert totals["entries_moved"] == before
+
+
+def test_remove_shard_window_serves_unpulled_keys_from_retired_shard():
+    store = ShardedStore(shards=3)
+    names = [f"r{i}" for i in range(30)]
+    _fill(store, names)
+    victim = store.shard_of(names[0])
+    mig = store.remove_shard(victim, drain=False)
+    assert mig.removed == (victim,)
+    assert victim not in store.shard_ids()           # ring updated at once
+    # un-pulled keys still readable (served off the retired shard) and the
+    # global name listing stays complete mid-window
+    assert set(names) <= set(store.names())
+    for i, n in enumerate(names):
+        np.testing.assert_allclose(np.asarray(store.get(n)), float(i))
+    store.drain_window()
+    assert len(store._shards[victim].entries) == 0
+    assert set(names) <= set(store.names())
+
+
+def test_cold_entries_migrate_as_index_records_without_payload_io():
+    tier = HostMemTier()
+    store = ShardedStore(shards=2, cold_tier=tier, cold_budget=0)
+    names = [f"c{i}" for i in range(16)]
+    _fill(store, names)                              # budget 0: all cold
+    io_before = tier.stats()["gets"] + tier.stats()["puts"]
+    mig = store.add_shard(5)
+    assert len(mig.moved) > 0
+    # the payload is keyed by name in the shared tier — moving a cold entry
+    # moves only its index record, no tier round trip
+    assert tier.stats()["gets"] + tier.stats()["puts"] == io_before
+    assert mig.bytes_moved == 1024 * len(mig.moved)  # accounted at cold size
+    for i, n in enumerate(names):
+        np.testing.assert_allclose(np.asarray(store.get(n)), float(i))
+
+
+def test_back_to_back_topology_changes_serialize_windows():
+    store = ShardedStore(shards=2)
+    _fill(store, [f"b{i}" for i in range(24)])
+    store.add_shard(4, drain=False)
+    assert store.migration_totals()["open"] is True
+    store.add_shard(5, drain=False)                  # drains window 1 first
+    store.drain_window()
+    totals = store.migration_totals()
+    assert totals["windows"] == 2 and totals["open"] is False
+    for i in range(24):
+        np.testing.assert_allclose(np.asarray(store.get(f"b{i}")), float(i))
+
+
+def test_legacy_stop_the_world_path_still_works_and_reports_cost():
+    store = ShardedStore(shards=2)
+    _fill(store, [f"l{i}" for i in range(16)])
+    mig = store.add_shard(3, incremental=False)
+    assert store.migration_window is None
+    assert mig.bytes_moved == 1024 * len(mig.moved) and mig.pulled == 0
+    assert mig.window_s > 0.0
+    for i in range(16):
+        np.testing.assert_allclose(np.asarray(store.get(f"l{i}")), float(i))
+
+
+def test_incremental_rebalance_bounds_reader_pause_and_never_goes_stale():
+    """The acceptance stress: concurrent read/write traffic across an
+    add_shard window with an injected per-entry migration delay.  No thread
+    may ever observe a stale or torn value, and the worst single-op pause
+    must be bounded by ~one entry migration — far below the whole window
+    (which is what the stop-the-world path would charge one reader)."""
+    store = ShardedStore(shards=2)
+    names = [f"s{i}" for i in range(64)]
+    _fill(store, names, shape=(64,))
+    pause = 0.015
+    store._migrate_entry_hook = lambda name: time.sleep(pause)
+    stop = threading.Event()
+    errors, op_times = [], []
+
+    def worker(t):
+        mine = names[t::4]                           # single writer per name
+        latest = {n: float(names.index(n)) for n in mine}
+        k = 0
+        try:
+            while not stop.is_set():
+                n = mine[k % len(mine)]
+                k += 1
+                t0 = time.perf_counter()
+                if k % 2:
+                    latest[n] += 1.0
+                    store.set(n, jnp.full((64,), latest[n]))
+                got = np.asarray(store.get(n))
+                op_times.append(time.perf_counter() - t0)
+                if not np.all(got == got[0]):
+                    errors.append(f"torn read of {n}")
+                elif got[0] != latest[n]:
+                    errors.append(f"stale read of {n}: {got[0]} != {latest[n]}")
+        except Exception as exc:  # pragma: no cover - surfaced via errors
+            errors.append(f"worker {t}: {exc!r}")
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for th in threads:
+        th.start()
+    time.sleep(0.05)
+    mig = store.add_shard(7, drain=False)
+    store.drain_window()
+    time.sleep(0.05)
+    stop.set()
+    for th in threads:
+        th.join()
+    store._migrate_entry_hook = None
+    assert not errors, errors[:5]
+    moved = len(mig.moved)
+    assert moved >= 8                                # the window did real work
+    window_s = store.migration_totals()["window_s"]
+    assert window_s >= moved * pause * 0.9
+    # bounded pause: one entry handoff (possibly queued behind one more),
+    # never the full window a stop-the-world rebalance would charge
+    assert max(op_times) < 0.5 * window_s
+    assert max(op_times) < 6 * pause + 0.1
+
+
+def test_incremental_handoff_is_checker_clean():
+    """step.check must accept the pair-locked handoff (its own exemption)
+    while still rejecting everything the old rules rejected: a live window
+    with concurrent disjoint traffic produces zero findings."""
+    sess = Session(backend="host", n_nodes=4, threads_per_node=1,
+                   shards=4, check=True)
+    refs = [sess.new_array(f"h{i}", (16,)) for i in range(16)]
+    started = threading.Event()
+
+    def rebalancer():
+        started.wait()
+        sess.store.add_shard(11, drain=False)        # workers pull on access
+        time.sleep(0.01)
+        sess.store.drain_window()
+
+    def proc(ctx):
+        started.set()
+        for rnd in range(40):
+            r = refs[ctx.tid * 4 + rnd % 4]          # disjoint per thread
+            r.set(jnp.full((16,), float(rnd)))
+            assert float(np.asarray(r.get())[0]) == float(rnd)
+        return True
+
+    mover = threading.Thread(target=rebalancer)
+    mover.start()
+    try:
+        assert sess.run(proc) == [True] * 4
+        mover.join()
+        assert sess.store.migration_window is None
+        assert sess.findings() == []
+    finally:
+        sess.checker.disable()
+
+
+# -- crash mid-migration + FT plumbing ----------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_recovery_mid_window_loses_and_duplicates_nothing(seed):
+    """Kill the session inside an open migration window at a random drain
+    point: session_recovery must complete the handoff — every key present
+    exactly once, every value intact, window closed."""
+    rng = np.random.default_rng(seed)
+    sess = Session(backend="host", n_nodes=3, threads_per_node=1, shards=3)
+    vals = {f"c{seed}_{i}": float(rng.integers(0, 1000))
+            for i in range(int(rng.integers(5, 40)))}
+    for k, v in vals.items():
+        sess.store.def_global(k, jnp.full((8,), v))
+    sess.store.add_shard(10 + seed, drain=False)
+    sess.store.migrate_step(int(rng.integers(0, len(vals) + 1)))
+    plan, new_sess = session_recovery(sess, [2])     # crash strikes now
+    assert new_sess.store is sess.store
+    assert new_sess.store.migration_window is None
+    listed = sorted(new_sess.store.names())
+    assert listed == sorted(vals)                    # nothing lost, no dupes
+    for k, v in vals.items():
+        np.testing.assert_allclose(np.asarray(new_sess.store.get(k)), v)
+
+
+@pytest.mark.slow
+def test_migration_stress_repeated_topology_changes_under_load():
+    """Soak: back-to-back add/remove topology changes under sustained 6-way
+    read/write traffic.  Every read must return the writer's latest value
+    (single writer per name), never torn, across every window.  Scaled up in
+    its own CI job via ``STEP_STRESS_SCALE``."""
+    scale = int(os.environ.get("STEP_STRESS_SCALE", "1"))
+    store = ShardedStore(shards=2)
+    names = [f"z{i}" for i in range(96)]
+    _fill(store, names, shape=(64,))
+    stop = threading.Event()
+    errors = []
+
+    def worker(t):
+        mine = names[t::6]                           # single writer per name
+        latest = {n: float(names.index(n)) for n in mine}
+        k = 0
+        try:
+            while not stop.is_set():
+                n = mine[k % len(mine)]
+                k += 1
+                if k % 3 == 0:
+                    latest[n] += 1.0
+                    store.set(n, jnp.full((64,), latest[n]))
+                got = np.asarray(store.get(n))
+                if not np.all(got == got[0]):
+                    errors.append(f"torn read of {n}")
+                elif got[0] != latest[n]:
+                    errors.append(f"stale read of {n}: {got[0]} != {latest[n]}")
+        except Exception as exc:  # pragma: no cover - surfaced via errors
+            errors.append(f"worker {t}: {exc!r}")
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(6)]
+    for th in threads:
+        th.start()
+    sids = iter(range(100, 100 + 3 * scale))
+    try:
+        for _ in range(3 * scale):
+            store.add_shard(next(sids), drain=False)
+            store.migrate_step(5)                    # partial manual drain
+            store.drain_window()
+            victim = min(store.shard_ids())
+            store.remove_shard(victim, drain=False)
+            store.drain_window()
+            time.sleep(0.01)
+    finally:
+        stop.set()
+        for th in threads:
+            th.join()
+    assert not errors, errors[:5]
+    totals = store.migration_totals()
+    assert totals["windows"] == 6 * scale and totals["open"] is False
+    assert sorted(store.names()) == sorted(names)    # nothing lost, no dupes
+    assert len(store.shard_ids()) == 2               # net topology unchanged
+
+
+def test_rebalance_plan_and_heartbeat_report_migration_cost():
+    """Satellite: ft.rebalance_shards' merged plan carries bytes_moved and
+    window duration, and ft.metrics_payload exposes the store's lifetime
+    rebalance totals."""
+    sess = Session(backend="host", n_nodes=2, threads_per_node=1, shards=2)
+    for i in range(24):
+        sess.store.def_global(f"fb{i}", jnp.full(ONE_KB, float(i)))
+    mig = rebalance_shards(sess.store, join=[6], leave=[0])
+    assert mig is not None
+    assert mig.bytes_moved >= 1024 * len(mig.moved) > 0
+    assert mig.bytes_moved % 1024 == 0
+    assert mig.window_s > 0.0
+    payload = metrics_payload(sess)
+    assert payload["rebalance"]["windows"] == 2
+    assert payload["rebalance"]["bytes_moved"] == mig.bytes_moved
+    assert payload["rebalance"]["open"] is False
+    for i in range(24):
+        np.testing.assert_allclose(np.asarray(sess.store.get(f"fb{i}")),
+                                   float(i))
