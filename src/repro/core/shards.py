@@ -606,7 +606,7 @@ class ShardedStore:
         (advisory reads, stats-grade like the ``stats`` property)."""
         hot_entries = hot_bytes = cold_entries = 0
         hot_hits = cold_hits = promotions = demotions = 0
-        for shard in self._shards.values():
+        for shard in list(self._shards.values()):
             hot_entries += len(shard.entries)
             cold_entries += len(shard.cold)
             hot_bytes += shard.hot_bytes
@@ -786,17 +786,25 @@ class ShardedStore:
         """Ensure ``name`` is on its new-ring owner before an op proceeds.
 
         Returns None in the common case (nothing to move, or the pull
-        completed).  Returns the *old* owner's shard id when this thread is
-        already inside an operation holding that shard's lock (the cache
-        composes store ops re-entrantly): pulling here would acquire the
-        pair out of order, and serving in place is correct — the entry is
-        still the single authoritative copy, and no other thread can move
-        it while this thread holds the lock."""
+        completed).  Returns a shard id to serve from when this thread is
+        already inside an operation holding one of the pair's locks (the
+        cache composes store ops re-entrantly): pulling here would acquire
+        the pair out of order, and serving in place is correct — the entry
+        is the single authoritative copy on whichever side it sits, and no
+        other thread can move it while this thread holds that lock.  The
+        new-owner check matters during the brief unsealed window phase,
+        where _window_move decides by ring comparison and still reports a
+        move for a name that has already crossed: without it, a re-entrant
+        op holding the new owner's lock would re-enter _migrate_one and
+        take the source lock second — a lock-order inversion that can
+        deadlock against a concurrent puller of the same shard pair."""
         mv = self._window_move(win, name)
         if mv is None:
             return None
         if self._shards[mv[0]].lock._is_owned():
             return mv[0]
+        if self._shards[mv[1]].lock._is_owned():
+            return mv[1]
         self._migrate_one(win, name, mv[0], mv[1], pulled=True)
         return None
 
@@ -1118,13 +1126,18 @@ class ShardedStore:
         tracing = telemetry.TRACING and trc.enabled
         t0 = time.perf_counter() if tracing else 0.0
         with self.locked_entry(name, owner) as (shard, e):
-            if self._cold is not None and e.value is None:
+            promoted = self._cold is not None and e.value is None
+            if promoted:
                 self._promote(shard, e)
-                self._maybe_demote(shard)
-            shard.stats["get"] += 1
-            shard.stats["bytes_get"] += _nbytes(e.value)
-            shard.stats["transfers"] += self._transfer_count(e.value)
+            # capture the value before rebalancing the budget: if every older
+            # hot entry is non-demotable, _maybe_demote's only victim is the
+            # entry being served, and e.value goes back to None under us
             value, sid = e.value, shard.id
+            shard.stats["get"] += 1
+            shard.stats["bytes_get"] += _nbytes(value)
+            shard.stats["transfers"] += self._transfer_count(value)
+            if promoted:
+                self._maybe_demote(shard)
         if tracing:
             trc.store_op("get", sid, t0, name=name)
         return value
@@ -1151,12 +1164,14 @@ class ShardedStore:
                 e.value = value
             if bump_epoch:
                 e.epoch += 1
-            if self._cold is not None:
-                self._note_resize(shard, e)
+            # account bytes before _note_resize: its demotion pass may spill
+            # this very entry, and a demoted value reads as zero bytes
             shard.stats["set"] += 1
             shard.stats["bytes_set"] += _nbytes(e.value)
             shard.stats["transfers"] += self._transfer_count(e.value)
             sid = shard.id
+            if self._cold is not None:
+                self._note_resize(shard, e)
         if tracing:
             trc.store_op("set", sid, t0, name=name)
 
@@ -1228,12 +1243,14 @@ class ShardedStore:
                 self._promote(shard, e)
             e.value = self._place(jnp.asarray(e.value) + amount, e.spec)
             e.epoch += 1
+            # capture before _note_resize: its demotion pass may pick this
+            # very entry as the victim and null e.value out
+            value, sid = e.value, shard.id
+            shard.stats["inc"] += 1
+            shard.stats["bytes_set"] += _nbytes(value)
+            shard.stats["transfers"] += self._transfer_count(value)
             if self._cold is not None:
                 self._note_resize(shard, e)
-            shard.stats["inc"] += 1
-            shard.stats["bytes_set"] += _nbytes(e.value)
-            shard.stats["transfers"] += self._transfer_count(e.value)
-            value, sid = e.value, shard.id
         if tracing:
             trc.store_op("inc", sid, t0, name=name)
         return value
@@ -1249,9 +1266,10 @@ class ShardedStore:
     def names(self):
         # every shard, not just ring members: during an open remove-window
         # the retired shard still holds its un-pulled entries (an entry
-        # lives in exactly one shard dict, so no name appears twice)
+        # lives in exactly one shard dict, so no name appears twice).
+        # list() snapshots the dict — add_shard can insert concurrently
         out: List[str] = []
-        for shard in self._shards.values():
+        for shard in list(self._shards.values()):
             with shard.lock:
                 out.extend(shard.entries)
                 out.extend(shard.cold)
@@ -1264,7 +1282,7 @@ class ShardedStore:
         """Aggregate op counters across every shard (retired shards included,
         so counters never run backwards across a rebalance)."""
         total = _fresh_stats()
-        for shard in self._shards.values():
+        for shard in list(self._shards.values()):
             for key, v in shard.stats.items():
                 total[key] += v
         return total
@@ -1297,7 +1315,7 @@ class ShardedStore:
         """Merged name→entry view across shards (read-only compatibility with
         the flat store; mutate through the store API, not this view)."""
         merged: Dict[str, GlobalEntry] = {}
-        for shard in self._shards.values():
+        for shard in list(self._shards.values()):
             merged.update(shard.cold)
             merged.update(shard.entries)
         return merged

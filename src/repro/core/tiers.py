@@ -31,6 +31,7 @@ memory, and pickling device arrays would be meaningless anyway.
 
 from __future__ import annotations
 
+import hashlib
 import os
 import pickle
 import shutil
@@ -40,8 +41,6 @@ from typing import Any, Dict, Optional, Protocol, runtime_checkable
 
 import jax
 import numpy as np
-
-from repro.core.addressing import ring_hash
 
 
 def host_payload(value: Any) -> Any:
@@ -142,8 +141,10 @@ class HostMemTier:
 class DiskTier:
     """On-disk cold tier: one pickled host pytree per name under ``root``.
 
-    File names are the blake2b ring hash of the DSM name (content-addressed),
-    so arbitrary names map onto the filesystem safely.  ``root=None`` spills
+    File names are a 160-bit blake2b digest of the full DSM name, so
+    arbitrary names map onto the filesystem safely and two distinct live
+    names can never share (and silently overwrite) one spill file — the
+    64-bit ring hash is too short for that guarantee.  ``root=None`` spills
     into a fresh temporary directory removed on :meth:`close` (and
     best-effort at interpreter exit)."""
 
@@ -159,7 +160,9 @@ class DiskTier:
         self._stats = _fresh_tier_stats()
 
     def _path(self, name: str) -> str:
-        return os.path.join(self.root, f"{ring_hash(name):016x}.pkl")
+        digest = hashlib.blake2b(str(name).encode("utf-8"),
+                                 digest_size=20).hexdigest()
+        return os.path.join(self.root, f"{digest}.pkl")
 
     def put(self, name: str, value: Any) -> int:
         payload = host_payload(value)

@@ -11,10 +11,12 @@ stale value.  With ``cold_tier=None`` (the default) every path stays
 single-tier at one extra branch per op.
 """
 
+import hashlib
 import os
 import threading
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -179,6 +181,139 @@ def test_session_plumbs_cold_tier_and_reports_tiers_metric():
     assert m["tiers"]["migration"] == sess.store.migration_totals()
     for i, r in enumerate(refs):                     # everything still exact
         np.testing.assert_allclose(np.asarray(r.get()), float(i))
+
+
+# -- review regressions -------------------------------------------------------
+
+
+def _pin_hot_abstract(shard, names, shape=ONE_KB):
+    """Turn the named hot entries abstract (trace-mode ShapeDtypeStructs):
+    they keep counting toward hot_bytes but _demotable rejects them, so the
+    demotion pass can only ever pick a concrete entry."""
+    for n in names:
+        shard.entries[n].value = jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_get_returns_promoted_value_even_when_demoted_right_back():
+    """Review regression: when every older hot entry is non-demotable, the
+    demotion pass after a promote picks the just-promoted entry as its only
+    victim — get() must still return the stored value, not None."""
+    store = ShardedStore(shards=1, cold_tier="host", cold_budget=2 * 1024)
+    _fill(store, ["victim", "pad0", "pad1"], base=6.0)
+    shard = store._shards[0]
+    assert "victim" in shard.cold                    # LRU spill past budget
+    _pin_hot_abstract(shard, ["pad0", "pad1"])
+    for _ in range(2):                               # stable across cycles
+        np.testing.assert_allclose(np.asarray(store.get("victim")), 6.0)
+        assert "victim" in shard.cold                # demoted back each time
+    assert shard.stats["demotions"] >= 3
+
+
+def test_inc_returns_new_value_even_when_demoted_right_back():
+    """Review regression: inc() promotes, computes, then re-budgets via
+    _note_resize; if that demotes the entry being served, the freshly
+    computed value must still be returned (and must round-trip)."""
+    store = ShardedStore(shards=1, cold_tier="host", cold_budget=2 * 1024)
+    _fill(store, ["ctr", "pad0", "pad1"], base=1.0)
+    shard = store._shards[0]
+    assert "ctr" in shard.cold
+    _pin_hot_abstract(shard, ["pad0", "pad1"])
+    out = store.inc("ctr", 2.0)
+    assert out is not None
+    np.testing.assert_allclose(np.asarray(out), 3.0)
+    assert "ctr" in shard.cold                       # demoted after serving
+    np.testing.assert_allclose(np.asarray(store.get("ctr")), 3.0)
+
+
+def test_settle_serves_in_place_under_the_new_owners_lock():
+    """Review regression: during the brief unsealed window phase the ring
+    comparison still reports a move for a name that has already crossed.  A
+    re-entrant op holding the NEW owner's lock (cache.write composes
+    store.set that way) must be served in place — re-entering the
+    pair-locked pull would take the source lock second, a lock-order
+    inversion that can deadlock against a concurrent puller."""
+    from repro.core.shards import MigrationWindow, Shard
+
+    store = ShardedStore(shards=2)
+    names = [f"u{i}" for i in range(16)]
+    _fill(store, names)
+    old_ring = store._ring
+    store._shards[9] = Shard(9)
+    new_ring = old_ring.added(9)
+    name = next(n for n in names if new_ring.owner(n) == 9)
+    win = MigrationWindow(old_ring, new_ring)        # unsealed on purpose
+    store._ring = new_ring
+    store._window = win
+    src, dst = store._shards[old_ring.owner(name)], store._shards[9]
+    dst.entries[name] = src.entries.pop(name)        # already crossed
+    orig = store._migrate_one
+
+    def boom(*a, **k):  # pragma: no cover - only fires on regression
+        raise AssertionError("re-entrant settle re-entered the pair pull")
+
+    store._migrate_one = boom
+    store._lock_shard(dst)                           # the re-entrant posture
+    try:
+        assert store._settle(win, name) == 9
+        np.testing.assert_allclose(np.asarray(store.get(name)),
+                                   float(names.index(name)))
+    finally:
+        store._unlock_shard(dst)
+        store._migrate_one = orig
+        store._window = None
+    np.testing.assert_allclose(np.asarray(store.get(name)),
+                               float(names.index(name)))
+
+
+def test_name_listings_and_stats_survive_concurrent_topology_changes():
+    """Review regression: names()/stats/tier_stats()/_entries iterate the
+    shard table while add_shard/remove_shard insert into it — they must
+    iterate a snapshot, never raising 'dictionary changed size'."""
+    store = ShardedStore(shards=2)
+    names = [f"n{i}" for i in range(64)]
+    _fill(store, names, shape=(8,))
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                assert set(store.names()) >= set()   # exercise the walk
+                store.stats
+                store.tier_stats()
+                store._entries
+        except Exception as exc:  # pragma: no cover - the regression itself
+            errors.append(repr(exc))
+
+    th = threading.Thread(target=reader)
+    th.start()
+    try:
+        for sid in range(50, 58):
+            store.add_shard(sid)
+            store.remove_shard(sid)
+    finally:
+        stop.set()
+        th.join()
+    assert not errors, errors[:3]
+    assert sorted(store.names()) == sorted(names)
+
+
+def test_disk_tier_spill_files_keyed_by_full_name_digest():
+    """Review regression: spill files must be keyed by a long digest of the
+    full DSM name — a 64-bit ring-hash key lets two distinct live names
+    share one file, silently serving one name the other's payload."""
+    tier = DiskTier()
+    try:
+        path = tier._path("a")
+        assert path != tier._path("b")
+        want = hashlib.blake2b(b"a", digest_size=20).hexdigest() + ".pkl"
+        assert os.path.basename(path) == want
+        tier.put("a", np.full(4, 1.0))
+        tier.put("b", np.full(4, 2.0))
+        np.testing.assert_allclose(tier.get("a"), 1.0)
+        np.testing.assert_allclose(tier.get("b"), 2.0)
+    finally:
+        tier.close()
 
 
 # -- incremental migration windows --------------------------------------------
