@@ -15,7 +15,6 @@ perf trajectory has data across PRs (``python -m benchmarks.run --only
 accumulator``).
 """
 
-import json
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -32,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_bench
 from repro.core import AccumMode, DAddAccumulator, GlobalStore, accumulate, shard_map
 from repro.core.sparse import blocked_topk_sparsify, pair_capacity
 from repro.launch.mesh import make_host_mesh
@@ -154,10 +153,7 @@ def main():
     host_layer()
     spmd_layer()
     sparsity_sweep()
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "BENCH_accumulator.json")
-    with open(out, "w") as f:
-        json.dump(RESULTS, f, indent=2)
+    out = write_bench("BENCH_accumulator.json", RESULTS)
     print(f"# wrote {out}", flush=True)
 
 

@@ -14,7 +14,6 @@ analysis, reported for scale, not gated).  Results land in
 ``benchmarks/BENCH_check.json``.
 """
 
-import json
 import os
 import sys
 
@@ -23,7 +22,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.bench_dsm_modes import _mixed_workload
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.check import NULL_CHECKER, Checker
 from repro.check import checker as stepcheck
 from repro.core import DSMCache, GlobalStore, Session
@@ -132,10 +131,7 @@ def main():
          f"pct={rw_overhead:.2f};limit=5;ok={rw_overhead <= 5.0}")
     emit("check_armed_overhead_rw", 0.0, f"pct={armed_overhead:.2f}")
 
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "BENCH_check.json")
-    with open(out, "w") as f:
-        json.dump(results, f, indent=2)
+    write_bench("BENCH_check.json", results)
     assert stepcheck.armed_count() == 0, "benchmark leaked an armed checker"
 
 

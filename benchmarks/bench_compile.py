@@ -11,7 +11,6 @@ so the perf trajectory has data across PRs.
     PYTHONPATH=src python -m benchmarks.bench_compile
 """
 
-import json
 import os
 import sys
 import time
@@ -20,7 +19,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.core import Session
 from repro.core.compat import cost_analysis
 
@@ -65,10 +64,7 @@ def main():
 
     lines = {r["lowered_lines"] for r in rows.values()}
     rows["constant_program_size"] = len(lines) == 1
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "BENCH_compile.json")
-    with open(out, "w") as f:
-        json.dump(rows, f, indent=2)
+    out = write_bench("BENCH_compile.json", rows)
     print(f"# wrote {out} (constant_program_size={rows['constant_program_size']})",
           flush=True)
 

@@ -12,7 +12,6 @@ Three structural measurements on real machinery:
    single cache lock serialised), written to ``benchmarks/BENCH_shards.json``.
 """
 
-import json
 import os
 import sys
 import threading
@@ -24,7 +23,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_bench
 from repro.core import DSMCache, GlobalStore, pack_spec, pack_tree, unpack_tree
 
 
@@ -156,10 +155,7 @@ def shard_sweep(n_threads: int = 8, n_names: int = 64,
     emit("dsm_sharded_speedup", 0.0,
          f"s8_over_s1={results['speedup_s8_over_s1']:.2f}x;"
          f"memo_s8={results['s8']['owner_memo_speedup']:.2f}x")
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "BENCH_shards.json")
-    with open(out, "w") as f:
-        json.dump(results, f, indent=2)
+    write_bench("BENCH_shards.json", results)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,6 @@ Three hot-path sweeps additionally land in ``benchmarks/BENCH_kernels.json``:
   vs re-hashing the ring on every call (S=8).
 """
 
-import json
 import os
 import sys
 
@@ -27,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_bench
 
 RESULTS = {}
 
@@ -170,10 +169,7 @@ def main():
     fused_density_sweep()
     topk_methods_sweep()
     owner_memo_bench()
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "BENCH_kernels.json")
-    with open(out, "w") as f:
-        json.dump(RESULTS, f, indent=2)
+    out = write_bench("BENCH_kernels.json", RESULTS)
     print(f"# wrote {out}", flush=True)
 
 

@@ -28,7 +28,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.core import DSMCache, GlobalStore
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -211,8 +211,7 @@ def main():
              f"dip={row['throughput_dip']:.2f}")
     emit("rebalance_pause_ratio", 0.0,
          f"stw_over_incremental={results['pause_ratio_stw_over_incremental']:.2f}x")
-    with open(os.path.join(HERE, "BENCH_rebalance.json"), "w") as f:
-        json.dump(results, f, indent=2)
+    write_bench("BENCH_rebalance.json", results)
 
 
 if __name__ == "__main__":

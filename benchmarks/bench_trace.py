@@ -13,7 +13,6 @@ must cost ≤5% on the rw mix), and ``enabled`` (full recording, reported for
 scale, not gated).  Results land in ``benchmarks/BENCH_trace.json``.
 """
 
-import json
 import os
 import sys
 
@@ -22,7 +21,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.bench_dsm_modes import _mixed_workload
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.core import DSMCache, GlobalStore, Session, telemetry
 from repro.core.telemetry import NULL_TRACER, Tracer
 
@@ -127,10 +126,7 @@ def main():
          f"pct={rw_overhead:.2f};limit=5;ok={rw_overhead <= 5.0}")
     emit("trace_enabled_overhead_rw", 0.0, f"pct={en_overhead:.2f}")
 
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "BENCH_trace.json")
-    with open(out, "w") as f:
-        json.dump(results, f, indent=2)
+    write_bench("BENCH_trace.json", results)
     assert telemetry.armed_count() == 0, "benchmark leaked an enabled tracer"
 
 

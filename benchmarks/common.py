@@ -1,9 +1,22 @@
-"""Benchmark helpers: timing + CSV emission (``name,us_per_call,derived``)."""
+"""Benchmark helpers: timing, CSV emission (``name,us_per_call,derived``) and
+provenance-stamped ``BENCH_*.json`` writing.
+
+Every BENCH file written through :func:`write_bench` carries a ``provenance``
+record with ``{host, commit, config}`` so a committed number can always be
+traced back to the machine, revision and toolchain that produced it
+(``tests/test_bench_schema.py`` pins this for every BENCH_*.json in the repo).
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import platform
+import subprocess
 import time
-from typing import Callable
+from typing import Any, Callable, Dict
+
+HERE = os.path.dirname(os.path.abspath(__file__))
 
 
 def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
@@ -21,3 +34,39 @@ def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def provenance(**config: Any) -> Dict[str, Any]:
+    """``{host, commit, config}`` for a BENCH file.
+
+    ``config`` always records the python and jax versions; callers extend it
+    with workload knobs via keyword arguments.  Never raises — a missing git
+    binary or a non-repo checkout degrades to ``commit: "unknown"``.
+    """
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=HERE, capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        commit = "unknown"
+    cfg: Dict[str, Any] = {"python": platform.python_version()}
+    try:
+        import jax
+        cfg["jax"] = jax.__version__
+    except Exception:
+        pass
+    cfg.update(config)
+    return {"host": platform.node() or "unknown", "commit": commit,
+            "config": cfg}
+
+
+def write_bench(filename: str, results: Dict[str, Any], **config: Any) -> str:
+    """Write ``results`` + a :func:`provenance` record to
+    ``benchmarks/<filename>`` and return the path."""
+    payload = dict(results)
+    payload["provenance"] = provenance(**config)
+    path = filename if os.path.isabs(filename) else os.path.join(HERE, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path

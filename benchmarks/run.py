@@ -25,6 +25,7 @@ BENCHES = [
     ("compile", "benchmarks.bench_compile"),                # ctx.iterate O(1) claim
     ("trace", "benchmarks.bench_trace"),                    # step.trace overhead
     ("check", "benchmarks.bench_check"),                    # step.check overhead
+    ("obs", "benchmarks.bench_obs"),                        # step.obs armed gate
 ]
 
 

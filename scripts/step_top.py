@@ -1,0 +1,229 @@
+#!/usr/bin/env python
+"""step_top — a live terminal view over ``Session.metrics()`` (step.obs).
+
+The `top(1)` of a STEP session: one screen refreshed in place showing ops/s
+per store verb, per-shard lock-wait quantiles, tier occupancy, the open
+migration window (if any), accumulator round latency, and the watchdog's
+anomaly tail.
+
+Rendering is a pure function of two metrics snapshots (:func:`render` —
+rates come from counter deltas over the refresh interval), so tests drive
+it with synthetic dicts and never need a terminal.
+
+Usage::
+
+    PYTHONPATH=src python scripts/step_top.py --demo            # self-driving
+    PYTHONPATH=src python scripts/step_top.py --demo --once     # one frame
+    PYTHONPATH=src python scripts/step_top.py --demo --frames 10 --interval 0.5
+
+Embedding in your own driver::
+
+    from scripts.step_top import render
+    print(render(session.metrics(), prev, dt, watchdog.anomalies))
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+_CLEAR = "\x1b[2J\x1b[H"
+
+#: store-op hist names whose rates headline the view
+_OP_NAMES = ("store.get", "store.set", "store.inc", "store.mget")
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}GiB"  # pragma: no cover - unreachable
+
+
+def _fmt_us(us: float) -> str:
+    return f"{us / 1000:.2f}ms" if us >= 1000 else f"{us:.0f}us"
+
+
+def _rate(cur: Dict[str, Any], prev: Optional[Dict[str, Any]], op: str,
+          dt: float) -> float:
+    """ops/s for one hist: counter delta over dt when a previous snapshot
+    exists, else the tracer's lifetime rate."""
+    ops = cur.get("trace", {}).get("ops", {})
+    row = ops.get(op)
+    if row is None:
+        return 0.0
+    if prev is None or dt <= 0:
+        return row.get("rate_per_s", 0.0)
+    prow = prev.get("trace", {}).get("ops", {}).get(op, {})
+    return max(0.0, (row.get("count", 0) - prow.get("count", 0)) / dt)
+
+
+def render(metrics: Dict[str, Any], prev: Optional[Dict[str, Any]] = None,
+           dt: float = 1.0, anomalies: Sequence[Any] = ()) -> str:
+    """One step_top frame as a plain string (no ANSI codes)."""
+    lines: List[str] = []
+    trace = metrics.get("trace", {})
+    ring = trace.get("ring") or {}
+    mode = ("trace" if trace.get("enabled") and not trace.get("record_only")
+            else "record" if trace.get("record_only") else "off")
+    lines.append(
+        f"step_top — backend={metrics.get('backend', '?')} "
+        f"obs={mode} ring={ring.get('held', 0)}/{ring.get('capacity', 0)} "
+        f"wire={metrics.get('wire_traffic', 0)} elems")
+    lines.append("")
+
+    # ops/s + latency per store verb
+    lines.append(f"{'op':<12}{'ops/s':>10}{'p50':>10}{'p99':>10}{'max':>10}")
+    ops = trace.get("ops", {})
+    for op in _OP_NAMES:
+        row = ops.get(op)
+        if row is None:
+            continue
+        lines.append(f"{op:<12}{_rate(metrics, prev, op, dt):>10.1f}"
+                     f"{_fmt_us(row.get('p50', 0)):>10}"
+                     f"{_fmt_us(row.get('p99', 0)):>10}"
+                     f"{_fmt_us(row.get('max', 0)):>10}")
+
+    # accumulator round latency (per-thread round + its barrier share)
+    acc = ops.get("accumulate")
+    bar = ops.get("accumulate.barrier") or ops.get("barrier.wait")
+    if acc or bar:
+        lines.append("")
+        if acc:
+            lines.append(
+                f"accum round  p50={_fmt_us(acc.get('p50', 0))} "
+                f"p99={_fmt_us(acc.get('p99', 0))} "
+                f"rounds={int(acc.get('count', 0))} "
+                f"rate={_rate(metrics, prev, 'accumulate', dt):.1f}/s")
+        if bar:
+            lines.append(f"barrier wait p50={_fmt_us(bar.get('p50', 0))} "
+                         f"p99={_fmt_us(bar.get('p99', 0))}")
+
+    # per-shard lock wait
+    per = trace.get("ops_by_shard", {}).get("store.lock_wait", {})
+    if per:
+        lines.append("")
+        lines.append(f"{'shard':<8}{'lock p50':>10}{'lock p99':>10}"
+                     f"{'waits':>8}")
+        for sid in sorted(per):
+            row = per[sid]
+            lines.append(f"{sid:<8}{_fmt_us(row.get('p50', 0)):>10}"
+                         f"{_fmt_us(row.get('p99', 0)):>10}"
+                         f"{int(row.get('count', 0)):>8}")
+
+    # tiers + migration
+    tiers = metrics.get("tiers", {})
+    hot, cold = tiers.get("hot", {}), tiers.get("cold", {})
+    lines.append("")
+    lines.append(
+        f"tiers  hot={hot.get('entries', 0)} entries/"
+        f"{_fmt_bytes(hot.get('bytes', 0))} "
+        f"cold={tiers.get('cold_entries', 0)} entries/"
+        f"{_fmt_bytes(cold.get('bytes', 0))} "
+        f"promote={tiers.get('promotions', 0)} "
+        f"demote={tiers.get('demotions', 0)}")
+    mig = tiers.get("migration", {})
+    state = (f"OPEN pending={mig.get('pending', 0)}" if mig.get("open")
+             else "idle")
+    lines.append(
+        f"migration  {state}  windows={mig.get('windows', 0)} "
+        f"moved={mig.get('entries_moved', 0)} "
+        f"({_fmt_bytes(mig.get('bytes_moved', 0))}) "
+        f"pulled={mig.get('pulled', 0)}")
+
+    if anomalies:
+        lines.append("")
+        lines.append(f"anomalies ({len(anomalies)}):")
+        for a in list(anomalies)[-5:]:
+            kind = a.get("kind") if isinstance(a, dict) else getattr(a, "kind", "?")
+            msg = a.get("message") if isinstance(a, dict) else getattr(a, "message", "")
+            lines.append(f"  [{kind}] {msg}")
+    return "\n".join(lines)
+
+
+def _demo_session():
+    """A self-driving session for ``--demo``: background threads hammer a
+    small tiered sharded store so every panel has live numbers."""
+    import threading
+
+    import jax.numpy as jnp
+
+    from repro.core.session import Session
+
+    sess = Session(shards=4, cold_tier="host", cold_budget=1 << 16,
+                   record=True)
+    refs = [sess.new_array(f"demo{i}", (2048,)) for i in range(16)]
+    stop = threading.Event()
+
+    def churn(seed: int) -> None:
+        i = seed
+        while not stop.is_set():
+            ref = refs[i % len(refs)]
+            if i % 3 == 0:
+                ref.set(jnp.full((2048,), float(i)))
+            else:
+                ref.get()
+            i += 1
+            time.sleep(0.002)
+
+    workers = [threading.Thread(target=churn, args=(k,), daemon=True)
+               for k in range(4)]
+    for w in workers:
+        w.start()
+    return sess, stop, workers
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--demo", action="store_true",
+                    help="drive a synthetic workload session to watch")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="refresh interval in seconds")
+    ap.add_argument("--frames", type=int, default=0,
+                    help="stop after N frames (0 = until interrupted)")
+    ap.add_argument("--once", action="store_true",
+                    help="print a single frame and exit")
+    ap.add_argument("--no-clear", action="store_true",
+                    help="append frames instead of redrawing in place")
+    args = ap.parse_args(argv)
+
+    if not args.demo:
+        ap.error("only --demo mode ships today: step_top needs an in-process "
+                 "session (pass --demo, or import render() in your driver)")
+    sess, stop, workers = _demo_session()
+    watchdog = sess.watchdog(interval_s=0.25).start()
+    prev = None
+    t_prev = time.perf_counter()
+    frames = 1 if args.once else args.frames
+    n = 0
+    try:
+        while True:
+            time.sleep(0.25 if prev is None else args.interval)
+            cur, t_cur = sess.metrics(), time.perf_counter()
+            frame = render(cur, prev, t_cur - t_prev, watchdog.anomalies)
+            if not args.no_clear and not args.once:
+                sys.stdout.write(_CLEAR)
+            sys.stdout.write(frame + "\n")
+            sys.stdout.flush()
+            prev, t_prev = cur, t_cur
+            n += 1
+            if frames and n >= frames:
+                break
+    except KeyboardInterrupt:  # pragma: no cover - interactive exit
+        pass
+    finally:
+        stop.set()
+        # a churn thread killed mid-jax-dispatch at interpreter exit aborts
+        # the process — wait for each to park before tearing down
+        for w in workers:
+            w.join(timeout=2)
+        watchdog.stop()
+        sess.recorder.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -278,6 +278,7 @@ class DSMCache:
                 self.store.set(name, value, owner=owner)       # write-through
                 stats.write_messages += 1
                 holders = shard.directory.get(name, set())
+                invalidated = 0
                 for holder in list(holders):
                     if holder != node_id:
                         # the store outlives sessions (FT recovery rolls a
@@ -287,9 +288,12 @@ class DSMCache:
                         if (holder < len(self.caches)
                                 and self.caches[holder].invalidate(name)):
                             stats.invalidations += 1
-                            if telemetry.TRACING and self.tracer.enabled:
-                                self.tracer.count("cache.invalidations")
+                            invalidated += 1
                         holders.discard(holder)
+                # one batched tracer count per write, not one per holder —
+                # this runs under the shard lock, where tracer time multiplies
+                if invalidated and telemetry.TRACING and self.tracer.enabled:
+                    self.tracer.count("cache.invalidations", invalidated)
                 # the writer keeps (updates) its own replica
                 evicted = self.caches[node_id].put(name, entry.epoch, value)
                 holders.add(node_id)

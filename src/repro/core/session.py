@@ -52,6 +52,7 @@ from __future__ import annotations
 import threading
 import time
 import warnings
+import weakref
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
@@ -60,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs as stepobs
 from repro.check import checker as stepcheck
 from repro.core import telemetry
 from repro.core.accumulator import AccumMode, DAddAccumulator, accumulate as spmd_accumulate
@@ -786,6 +788,17 @@ class Session:
         as-is, and the default ``None`` leaves checking off at one-branch
         hot-path cost.  Inspect via ``session.checker`` / :meth:`findings`;
         export with ``session.checker.export(path)``.
+    record:
+        ``step.obs`` flight-recorder arming, same contract again: ``True``
+        arms a fresh :class:`~repro.obs.FlightRecorder` (a bounded ring of
+        recent events, cheap enough to leave on always — the tracer runs in
+        *record-only* mode unless ``trace`` armed it fully), an existing
+        recorder is adopted as-is (FT recovery re-attaches the dead
+        session's recorder), and the default ``None`` leaves recording off.
+        Inspect via ``session.recorder``; pair with :meth:`watchdog` for
+        anomaly detection and :meth:`openmetrics` for scrape text.  Call
+        ``session.recorder.close()`` when done with an armed recorder so
+        the module-level tracing flag drops back.
     """
 
     def __init__(self, backend: Backend | str = "host", *,
@@ -799,7 +812,8 @@ class Session:
                  accum_mode: AccumMode | str = AccumMode.REDUCE_SCATTER,
                  cache_capacity: int = 1024,
                  trace: "telemetry.Tracer | bool | None" = None,
-                 check: "stepcheck.Checker | bool | None" = None):
+                 check: "stepcheck.Checker | bool | None" = None,
+                 record: "stepobs.FlightRecorder | bool | None" = None):
         if isinstance(backend, str):
             if backend == "host":
                 backend = HostBackend(n_nodes, threads_per_node)
@@ -817,6 +831,16 @@ class Session:
         # checker; a Checker instance is adopted as-is (FT recovery re-arms
         # the failed session's checker); default is disabled, one branch.
         self.checker = stepcheck.as_checker(check)
+        # step.obs: record=True arms the flight recorder — a bounded ring of
+        # recent events behind the same tracer; when `trace` didn't arm full
+        # tracing the tracer runs record-only (hists/counters accumulate,
+        # only slow/lifecycle events materialise, memory stays O(capacity)).
+        self.recorder = stepobs.as_recorder(record)
+        self.recorder.attach(self.tracer)
+        # sync primitives handed out by this session, for the watchdog's
+        # live in-flight-wait scan (weak: a dropped barrier unregisters
+        # itself; nothing here extends primitive lifetime)
+        self._watch_prims: "weakref.WeakSet" = weakref.WeakSet()
         # step.tiers: cold_tier ("host" | "disk" | a ColdTier instance) and
         # cold_budget (per-shard hot bytes before LRU demotion kicks in) are
         # store-construction options — like `shards`, they are ignored when
@@ -834,6 +858,7 @@ class Session:
         if backend.kind == "host":
             backend.run_barrier.tracer = self.tracer
             backend.run_barrier.checker = self.checker
+            self._watch_prims.add(backend.run_barrier)
         self._sparse_k: Dict[str, int] = {}  # per-ref default top-k budgets
         self._tls = threading.local()
 
@@ -997,12 +1022,14 @@ class Session:
         b = DBarrier(count or self.backend.n_threads)
         b.tracer = self.tracer
         b.checker = self.checker
+        self._watch_prims.add(b)
         return b
 
     def semaphore(self, count: int = 1) -> DSemaphore:
         s = DSemaphore(count)
         s.tracer = self.tracer
         s.checker = self.checker
+        self._watch_prims.add(s)
         return s
 
     def ssp_clock(self, staleness: int = 0, n_workers: Optional[int] = None) -> SSPClock:
@@ -1079,6 +1106,23 @@ class Session:
                 "tiers": {**self.store.tier_stats(),
                           "migration": self.store.migration_totals()},
                 "trace": self.tracer.snapshot()}
+
+    def openmetrics(self, *, prefix: str = "step",
+                    anomalies: Optional[Sequence[Any]] = None) -> str:
+        """:meth:`metrics` rendered as OpenMetrics/Prometheus exposition
+        text (``step.obs``'s scrape surface).  Pass ``watchdog.anomalies``
+        to include the anomaly counters on the same page."""
+        return stepobs.openmetrics(self.metrics(), prefix=prefix,
+                                   anomalies=anomalies)
+
+    def watchdog(self, **kwargs) -> "stepobs.Watchdog":
+        """A :class:`~repro.obs.Watchdog` over this session (not started —
+        call ``.start()`` for the daemon thread or drive ``poll_once()``
+        yourself).  Detects stalled migration windows, barrier/semaphore
+        waits beyond a p99-derived SLO, tier thrash, shard lock-wait
+        outliers, and (via ``watch_heartbeats``) dead nodes; each anomaly
+        carries a flight-recorder dump when :attr:`recorder` is armed."""
+        return stepobs.Watchdog(self, **kwargs)
 
     def shard_stats(self) -> Dict[int, Dict[str, Any]]:
         """Per-shard view of the session, keyed by shard id: the store's op

@@ -409,10 +409,22 @@ class ShardedStore:
         (the per-shard contention signal the ROADMAP's overlap work needs)."""
         trc = self.tracer
         if telemetry.TRACING and trc.enabled:
-            t0 = time.perf_counter()
-            shard.lock.acquire()
-            trc.observe("store.lock_wait", (time.perf_counter() - t0) * 1e6,
-                        shard=shard.id)
+            lock = shard.lock
+            if lock._is_owned():
+                # re-entrant acquire (cache → nested store op on the same
+                # shard): by definition not a wait — recording its constant
+                # zero would only dilute the contention histogram
+                lock.acquire()
+            else:
+                t0 = time.perf_counter()
+                lock.acquire()
+                wait_us = (time.perf_counter() - t0) * 1e6
+                # record-only (armed flight recorder) keeps only true waits:
+                # sub-µs uncontended acquires are 95%+ of acquisitions and
+                # the per-call tracer time they cost is exactly what the
+                # armed ≤5% overhead budget cannot afford
+                if not trc.record_only or wait_us >= 1.0:
+                    trc.observe("store.lock_wait", wait_us, shard=shard.id)
         else:
             shard.lock.acquire()
         ck = self.checker
@@ -719,6 +731,14 @@ class ShardedStore:
         with win.lock:
             win.sealed = True
             empty = not win.pending
+            pending = len(win.pending)
+        trc = self.tracer
+        if telemetry.TRACING and trc.enabled:
+            # lifecycle breadcrumb: a window that then *stalls* emits no
+            # further events, so the open mark is what a flight-recorder
+            # dump shows the watchdog fired against
+            trc.mark("migration", "window.open", pending=pending,
+                     added=list(added), removed=list(removed))
         if empty:
             self._close_window(win)
         elif drain:

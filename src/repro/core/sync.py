@@ -29,7 +29,14 @@ class DBarrier:
     When a tracer is armed (``barrier.tracer``, attached by
     ``Session.barrier()`` and to the backend's run barrier), every ``enter``
     records a per-thread entry→release span (category ``barrier-wait``) and
-    feeds the ``barrier.wait`` latency histogram."""
+    feeds the ``barrier.wait`` latency histogram.
+
+    In-flight waits are tracked regardless of tracing (two dict ops under
+    the condition lock per blocked enter): ``oldest_wait_start()`` is how
+    the step.obs watchdog sees a straggler *while it is still waiting*, not
+    only after the wait lands in the histogram."""
+
+    watch_kind = "barrier"   # step.obs watchdog registry tag
 
     def __init__(self, count: int):
         self.count = count
@@ -37,6 +44,7 @@ class DBarrier:
         self._arrived = 0
         self._generation = 0
         self.entries = 0  # stats: total Enter calls observed by the controller
+        self._wait_t0: Dict[int, float] = {}  # thread ident -> wait start
         self.tracer = telemetry.NULL_TRACER
         self.checker = stepcheck.NULL_CHECKER
 
@@ -75,10 +83,25 @@ class DBarrier:
                 self._cond.notify_all()
                 return True
             t = None if (timeout is None or timeout < 0) else timeout
-            while gen == self._generation:
-                if not self._cond.wait(timeout=t):
-                    return False
-            return True
+            ident = threading.get_ident()
+            self._wait_t0[ident] = time.perf_counter()
+            try:
+                while gen == self._generation:
+                    if not self._cond.wait(timeout=t):
+                        return False
+                return True
+            finally:
+                self._wait_t0.pop(ident, None)
+
+    def oldest_wait_start(self) -> Optional[float]:
+        """``perf_counter`` timestamp of the longest-blocked in-flight enter
+        (None when nobody is waiting) — the watchdog's live-stall probe."""
+        with self._cond:
+            return min(self._wait_t0.values(), default=None)
+
+    def waiters(self) -> int:
+        with self._cond:
+            return len(self._wait_t0)
 
     # paper-cased alias (Enter(int timeout=-1))
     def Enter(self, timeout: float = -1) -> bool:
@@ -86,7 +109,13 @@ class DBarrier:
 
 
 class DSemaphore:
-    """Counting semaphore with FIFO wakeup, as specified in §5.3."""
+    """Counting semaphore with FIFO wakeup, as specified in §5.3.
+
+    Like :class:`DBarrier`, in-flight acquire waits are tracked always
+    (``oldest_wait_start()``), so the watchdog can flag a starved acquirer
+    before its wait ever completes into the latency histogram."""
+
+    watch_kind = "semaphore"   # step.obs watchdog registry tag
 
     def __init__(self, count: int):
         if count < 0:
@@ -95,6 +124,7 @@ class DSemaphore:
         self._cond = threading.Condition()
         self._queue: deque[int] = deque()
         self._ticket = 0
+        self._wait_t0: Dict[int, float] = {}  # ticket -> wait start
         self.tracer = telemetry.NULL_TRACER
         self.checker = stepcheck.NULL_CHECKER
 
@@ -127,17 +157,31 @@ class DSemaphore:
             ticket = self._ticket
             self._ticket += 1
             self._queue.append(ticket)
+            self._wait_t0[ticket] = time.perf_counter()
             if telemetry.TRACING and trc.enabled:
                 trc.observe("semaphore.queue_depth", float(len(self._queue)))
             t = None if (timeout is None or timeout < 0) else timeout
-            while not (self._count > 0 and self._queue[0] == ticket):
-                if not self._cond.wait(timeout=t):
-                    self._queue.remove(ticket)
-                    return False
-            self._queue.popleft()
-            self._count -= 1
-            self._cond.notify_all()
-            return True
+            try:
+                while not (self._count > 0 and self._queue[0] == ticket):
+                    if not self._cond.wait(timeout=t):
+                        self._queue.remove(ticket)
+                        return False
+                self._queue.popleft()
+                self._count -= 1
+                self._cond.notify_all()
+                return True
+            finally:
+                self._wait_t0.pop(ticket, None)
+
+    def oldest_wait_start(self) -> Optional[float]:
+        """``perf_counter`` timestamp of the head-of-queue (longest) in-flight
+        acquire, or None when the queue is idle."""
+        with self._cond:
+            return min(self._wait_t0.values(), default=None)
+
+    def waiters(self) -> int:
+        with self._cond:
+            return len(self._wait_t0)
 
     def release(self) -> None:
         ck = self.checker

@@ -94,19 +94,35 @@ def reset() -> int:
 
 
 class Hist:
-    """Count/total/max plus a bounded ring of recent observations for
+    """Count/total/max plus a bounded reservoir of observations for
     percentile estimation.  Values are unit-free (store ops record
-    microseconds; queue depth and clock skew record plain counts)."""
+    microseconds; queue depth and clock skew record plain counts).
 
-    __slots__ = ("count", "total", "max", "_sample", "_next")
+    The reservoir is Vitter's Algorithm R over the full observation stream:
+    once SAMPLE values are held, the i-th observation replaces a uniformly
+    chosen slot with probability SAMPLE/i, so every observation — first or
+    last — has equal weight in the quantiles.  (The previous most-recent-ring
+    retention made long-run p99 a recency window; pure first-N would bias it
+    toward warm-up.)  Randomness comes from a per-hist xorshift64 stream with
+    a fixed seed: identical observation sequences give identical quantiles,
+    and there is no cross-hist or cross-run jitter to chase in tests.
+
+    ``add`` is called without the tracer lock (see ``Tracer.observe``) and is
+    written to be GIL-race-tolerant: concurrent adds may lose an occasional
+    increment or reservoir slot (stats-grade undercounting) but can never
+    raise or corrupt the sample — every index used is bounded by SAMPLE,
+    which ``_sample`` can only grow past, never shrink below."""
+
+    __slots__ = ("count", "total", "max", "_sample", "_rng")
     SAMPLE = 4096
+    _SEED = 0x9E3779B97F4A7C15  # any odd non-zero constant works
 
     def __init__(self):
         self.count = 0
         self.total = 0.0
         self.max = 0.0
         self._sample: List[float] = []
-        self._next = 0
+        self._rng = self._SEED
 
     def add(self, v: float) -> None:
         self.count += 1
@@ -115,9 +131,15 @@ class Hist:
             self.max = v
         if len(self._sample) < self.SAMPLE:
             self._sample.append(v)
-        else:                       # ring: keep the most recent SAMPLE values
-            self._sample[self._next] = v
-            self._next = (self._next + 1) % self.SAMPLE
+        else:                       # Algorithm R: keep slot j with p=SAMPLE/i
+            x = self._rng
+            x ^= (x << 13) & 0xFFFFFFFFFFFFFFFF
+            x ^= x >> 7
+            x ^= (x << 17) & 0xFFFFFFFFFFFFFFFF
+            self._rng = x
+            j = x % self.count
+            if j < self.SAMPLE:
+                self._sample[j] = v
 
     def snapshot(self) -> Dict[str, float]:
         s = sorted(self._sample)
@@ -132,8 +154,57 @@ class Hist:
 
 
 # ---------------------------------------------------------------------------
+# Ring sink: the flight-recorder backing store (step.obs)
+# ---------------------------------------------------------------------------
+
+
+class RingSink:
+    """Fixed-capacity overwrite-oldest event buffer.
+
+    The bounded counterpart of the tracer's unbounded ``_events`` list: a
+    :class:`~repro.obs.FlightRecorder` hangs one of these off a tracer
+    (``tracer.ring``) so the last ``capacity`` events are always available
+    for a post-incident dump, at O(capacity) memory no matter how long the
+    session runs.  ``append`` is called under the tracer lock; ``snapshot``
+    must be too (the tracer's ``ring_events`` wraps it)."""
+
+    __slots__ = ("capacity", "_buf", "_next", "total")
+
+    def __init__(self, capacity: int = 4096):
+        if capacity <= 0:
+            raise ValueError(f"ring capacity must be positive, got {capacity}")
+        self.capacity = int(capacity)
+        self._buf: List[Optional[dict]] = [None] * self.capacity
+        self._next = 0
+        self.total = 0  # lifetime appends; total - len(self) were overwritten
+
+    def append(self, ev: dict) -> None:
+        self._buf[self._next] = ev
+        self._next = (self._next + 1) % self.capacity
+        self.total += 1
+
+    def __len__(self) -> int:
+        return min(self.total, self.capacity)
+
+    def snapshot(self) -> List[dict]:
+        """Held events oldest→newest (shallow copies, safe to mutate/json)."""
+        if self.total < self.capacity:
+            rows = self._buf[:self.total]
+        else:
+            rows = self._buf[self._next:] + self._buf[:self._next]
+        return [dict(e) for e in rows if e is not None]
+
+
+# ---------------------------------------------------------------------------
 # Tracer
 # ---------------------------------------------------------------------------
+
+
+#: Span categories always materialised into the ring in record-only mode,
+#: regardless of duration: rare lifecycle edges (migration windows, SPMD
+#: trace/execute) and anomaly breadcrumbs are exactly what a post-incident
+#: dump is for, and none of them sit on a per-op hot path.
+ALWAYS_RECORD = frozenset({"migration", "anomaly", "spmd", "lifecycle"})
 
 
 class _SpanCM:
@@ -200,6 +271,16 @@ class Tracer:
         self._epoch = time.perf_counter()
         self._events: List[dict] = []
         self.dropped_events = 0
+        # step.obs flight-recorder hooks.  `ring` (a RingSink) additionally
+        # receives every materialised event.  `record_only` is the armed-
+        # recorder mode: counters/hists accumulate as usual, but span events
+        # are materialised ONLY into the ring, and only when slow (duration
+        # >= slow_us) or in an ALWAYS_RECORD category — the unbounded
+        # `_events` list stays empty and fast ops allocate nothing, which is
+        # what makes `Session(record=True)` cheap enough to leave on.
+        self.ring: Optional[RingSink] = None
+        self.record_only = False
+        self.slow_us = 1000.0
         self._counters: Dict[str, float] = {}
         self._hists: Dict[str, Hist] = {}
         self._shard_hists: Dict[str, Dict[int, Hist]] = {}
@@ -254,6 +335,14 @@ class Tracer:
 
     def add_span(self, cat: str, name: str, t0: float, t1: float,
                  args: Optional[dict] = None) -> None:
+        if (self.record_only and (t1 - t0) * 1e6 < self.slow_us
+                and cat not in ALWAYS_RECORD):
+            # armed-recorder fast path: fast ops leave no event (their latency
+            # still lands in the histograms via observe/store_op/wait_span).
+            # Skipping the lock here means `spans_by_category` undercounts
+            # fast spans in record-only mode — a documented trade for not
+            # serialising every hot op on the tracer lock twice.
+            return
         pid, tid = self._ids()
         ev = {"name": name, "cat": cat, "ph": "X",
               "ts": (t0 - self._epoch) * 1e6, "dur": (t1 - t0) * 1e6,
@@ -262,29 +351,63 @@ class Tracer:
             ev["args"] = args
         with self._lock:
             self._span_counts[cat] = self._span_counts.get(cat, 0) + 1
+            if self.ring is not None:
+                self.ring.append(ev)
+            if self.record_only:
+                return              # ring only: `_events` must stay bounded
             if len(self._events) < self.max_events:
                 self._events.append(ev)
             else:
                 self.dropped_events += 1
 
-    def count(self, name: str, amount: float = 1) -> None:
+    def mark(self, cat: str, name: str, **args) -> None:
+        """Record an instant ('i') event.  Marks are never filtered by
+        ``record_only``/``slow_us`` — they are the lifecycle breadcrumbs
+        (window opened, anomaly fired, node died) a flight-recorder dump must
+        contain even when every op around them was fast."""
+        pid, tid = self._ids()
+        ev = {"name": name, "cat": cat, "ph": "i", "s": "p",
+              "ts": (time.perf_counter() - self._epoch) * 1e6,
+              "pid": pid, "tid": tid}
+        if args:
+            ev["args"] = args
         with self._lock:
-            self._counters[name] = self._counters.get(name, 0) + amount
+            self._span_counts[cat] = self._span_counts.get(cat, 0) + 1
+            if self.ring is not None:
+                self.ring.append(ev)
+            if not self.record_only:
+                if len(self._events) < self.max_events:
+                    self._events.append(ev)
+                else:
+                    self.dropped_events += 1
+
+    def count(self, name: str, amount: float = 1) -> None:
+        # Lock-free like observe(): a get + set is GIL-atomic per step, and a
+        # lost concurrent increment is stats-grade noise.  Counters that must
+        # be exact (accumulator rounds, wire elements) are incremented from
+        # exactly one thread per round, where no race exists.
+        self._counters[name] = self._counters.get(name, 0) + amount
 
     def observe(self, name: str, value: float, shard: Optional[int] = None) -> None:
-        with self._lock:
-            h = self._hists.get(name)
-            if h is None:
-                h = self._hists[name] = Hist()
-            h.add(value)
-            if shard is not None:
-                per = self._shard_hists.get(name)
-                if per is None:
-                    per = self._shard_hists[name] = {}
-                hs = per.get(shard)
-                if hs is None:
-                    hs = per[shard] = Hist()
-                hs.add(value)
+        # Deliberately lock-free: observe() fires 2-3× per store op — often
+        # while the caller holds a shard lock — and serialising all worker
+        # threads on the tracer lock here is what pushed the armed-recorder
+        # overhead past its ≤5% budget.  Under the GIL every step below is
+        # safe (setdefault is atomic; Hist.add mutates only per-hist state),
+        # and a lost `count += 1` race is a benign sub-ppm undercount in a
+        # stats-grade histogram, never a crash or a non-monotonic read.
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists.setdefault(name, Hist())
+        h.add(value)
+        if shard is not None:
+            per = self._shard_hists.get(name)
+            if per is None:
+                per = self._shard_hists.setdefault(name, {})
+            hs = per.get(shard)
+            if hs is None:
+                hs = per.setdefault(shard, Hist())
+            hs.add(value)
 
     def span(self, cat: str, name: str, **args) -> _SpanCM:
         return _SpanCM(self, cat, name, args or None)
@@ -294,14 +417,21 @@ class Tracer:
 
     def store_op(self, op: str, shard: int, t0: float, **args) -> None:
         t1 = time.perf_counter()
-        self.add_span("store-op", f"store.{op}", t0, t1,
-                      dict(args, shard=shard) if args else {"shard": shard})
-        self.observe(f"store.{op}", (t1 - t0) * 1e6, shard=shard)
+        name = "store." + op
+        us = (t1 - t0) * 1e6
+        # record-only fast ops skip add_span entirely (no args dict, no call)
+        if not self.record_only or us >= self.slow_us:
+            self.add_span("store-op", name, t0, t1,
+                          dict(args, shard=shard) if args else {"shard": shard})
+        self.observe(name, us, shard=shard)
 
     def wait_span(self, cat: str, name: str, t0: float, **args) -> None:
         t1 = time.perf_counter()
-        self.add_span(cat, name, t0, t1, args or None)
-        self.observe(name, (t1 - t0) * 1e6)
+        us = (t1 - t0) * 1e6
+        if (not self.record_only or us >= self.slow_us
+                or cat in ALWAYS_RECORD):
+            self.add_span(cat, name, t0, t1, args or None)
+        self.observe(name, us)
 
     # -- introspection --------------------------------------------------------
 
@@ -319,22 +449,51 @@ class Tracer:
         with self._lock:
             return dict(self._counters)
 
+    def ring_events(self) -> List[dict]:
+        """Events currently held by the attached ring, oldest→newest (empty
+        when no recorder ever attached a ring)."""
+        with self._lock:
+            return self.ring.snapshot() if self.ring is not None else []
+
+    def hist(self, name: str) -> Optional[Dict[str, float]]:
+        """One histogram's snapshot (None if never observed) — the watchdog's
+        SLO source; cheaper than a full :meth:`snapshot`."""
+        with self._lock:
+            h = self._hists.get(name)
+            return h.snapshot() if h is not None else None
+
+    def shard_hist(self, name: str) -> Dict[int, Dict[str, float]]:
+        """Per-shard snapshots of one histogram (empty if never observed)."""
+        with self._lock:
+            per = self._shard_hists.get(name)
+            # list() first: observe() inserts without the lock, and the
+            # comprehension runs bytecode (h.snapshot()) between iterations.
+            return {sid: h.snapshot() for sid, h in list(per.items())} if per else {}
+
     def snapshot(self) -> Dict[str, Any]:
         """Structured metrics snapshot: span counts per category, counters,
         and per-op histograms (with rates) — the ``trace`` section of
         ``Session.metrics()`` and the heartbeat payload."""
         elapsed = max(time.perf_counter() - self._epoch, 1e-9)
         with self._lock:
-            ops = {name: h.snapshot() for name, h in self._hists.items()}
+            # Writers (observe/count) skip the lock, so iterate atomic list()
+            # copies — a concurrent insert mid-comprehension would otherwise
+            # raise "dictionary changed size during iteration".
+            ops = {name: h.snapshot() for name, h in list(self._hists.items())}
             for name, snap in ops.items():
                 snap["rate_per_s"] = snap["count"] / elapsed
-            by_shard = {name: {sid: h.snapshot() for sid, h in per.items()}
-                        for name, per in self._shard_hists.items()}
+            by_shard = {name: {sid: h.snapshot() for sid, h in list(per.items())}
+                        for name, per in list(self._shard_hists.items())}
             return {
                 "enabled": self.enabled,
+                "record_only": self.record_only,
                 "elapsed_s": elapsed,
                 "events": len(self._events),
                 "dropped_events": self.dropped_events,
+                "ring": (None if self.ring is None else
+                         {"capacity": self.ring.capacity,
+                          "held": len(self.ring),
+                          "total": self.ring.total}),
                 "spans_by_category": dict(self._span_counts),
                 "counters": dict(self._counters),
                 "ops": ops,

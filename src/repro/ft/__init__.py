@@ -9,12 +9,13 @@ from repro.ft.checkpoint import (
 from repro.ft.elastic import (RecoveryPlan, elastic_restore, plan_recovery,
                               rebalance_batch, rebalance_shards, reshard_tree,
                               session_recovery)
-from repro.ft.heartbeat import HeartbeatMonitor, metrics_payload
+from repro.ft.heartbeat import (HeartbeatMonitor, PAYLOAD_KEYS,
+                                REBALANCE_KEYS, metrics_payload)
 
 __all__ = [
     "AsyncCheckpointer", "Checkpoint", "latest_step", "list_checkpoints",
     "restore_checkpoint", "save_checkpoint",
     "RecoveryPlan", "elastic_restore", "plan_recovery", "rebalance_batch",
     "rebalance_shards", "reshard_tree", "session_recovery",
-    "HeartbeatMonitor", "metrics_payload",
+    "HeartbeatMonitor", "PAYLOAD_KEYS", "REBALANCE_KEYS", "metrics_payload",
 ]

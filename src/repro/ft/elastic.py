@@ -33,6 +33,11 @@ class RecoveryPlan:
     reassignment: Dict[int, int]   # failed worker tid -> survivor node id
     new_world: List[int]           # surviving node ids
     migration: Optional[Any] = None  # ShardMigration when the DSM rebalanced
+    # step.obs: the dead session's flight-recorder dump, captured at the
+    # moment recovery started (before the open window drains) — the "black
+    # box" for the postmortem, attached when the session had an armed
+    # FlightRecorder
+    flight_dump: Optional[Dict[str, Any]] = None
 
 
 def rebalance_shards(store, *, join: Sequence[int] = (), leave: Sequence[int] = ()):
@@ -125,6 +130,19 @@ def session_recovery(session, failed_nodes: Sequence[int], mode: str = "multi",
     if session.backend.kind != "host":
         raise ValueError("session_recovery drills node failure on the host "
                          "backend; SPMD recovery goes through elastic_restore")
+    # black box first: capture the flight recorder *before* recovery mutates
+    # anything, so the dump shows the store as the failure left it (open
+    # window, pending entries and all) — the recovery mark itself is the
+    # dump's last breadcrumb
+    from repro.core import telemetry
+    recorder = getattr(session, "recorder", None)
+    flight_dump = None
+    if recorder is not None and getattr(recorder, "armed", False):
+        trc = session.tracer
+        if telemetry.TRACING and trc.enabled:
+            trc.mark("lifecycle", "session_recovery",
+                     failed=list(failed_nodes), mode=mode)
+        flight_dump = recorder.dump(reason="session-recovery")
     # a crash can land mid-migration: the incremental window lives on the
     # store (which survives the session), so recovery first drains any open
     # window to completion — every entry settles at its ring owner exactly
@@ -140,13 +158,16 @@ def session_recovery(session, failed_nodes: Sequence[int], mode: str = "multi",
     shards_follow_nodes = session.store.n_shards == pool.n_nodes
     if rebalance is True or (rebalance == "auto" and shards_follow_nodes):
         plan.migration = rebalance_shards(session.store, leave=failed_nodes)
+    plan.flight_dump = flight_dump
     tpn = threads_per_node or pool.threads_per_node
-    # the replacement session adopts the dead session's tracer and checker
-    # as-is, so an armed step.trace/step.check survives recovery (spans and
-    # findings keep accumulating) and a disabled one stays disabled
+    # the replacement session adopts the dead session's tracer, checker and
+    # flight recorder as-is, so an armed step.trace/step.check/step.obs
+    # survives recovery (spans, findings and the event ring keep
+    # accumulating) and a disabled one stays disabled
     new_session = Session(backend=HostBackend(len(plan.new_world), tpn),
                           store=session.store, accum_mode=session.accum_mode,
-                          trace=session.tracer, check=session.checker)
+                          trace=session.tracer, check=session.checker,
+                          record=recorder)
     return plan, new_session
 
 

@@ -15,19 +15,44 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Set
 
 
+#: Canonical key set of one heartbeat payload.  Dashboards and exporters key
+#: off this — every :func:`metrics_payload` carries exactly these fields, on
+#: every session flavour, whether or not tracing/recording/migration ever ran.
+PAYLOAD_KEYS = ("trace_enabled", "record_armed", "op_rates",
+                "barrier_wait_us", "wire_traffic", "rebalance")
+
+#: Canonical key set of the payload's ``rebalance`` record (the store's
+#: lifetime migration totals plus live-window state).  A store that never
+#: migrated — or one without migration support at all — still emits every
+#: key, zeroed, so the dashboard column set is stable from the first beat.
+REBALANCE_KEYS = ("windows", "entries_moved", "bytes_moved", "pulled",
+                  "window_s", "open", "pending")
+
+_REBALANCE_ZERO = {"windows": 0, "entries_moved": 0, "bytes_moved": 0,
+                   "pulled": 0, "window_s": 0.0, "open": False, "pending": 0}
+
+
 def metrics_payload(session) -> Dict[str, Any]:
     """A compact metrics snapshot for heartbeat payloads: op rates plus
     barrier-wait latency quantiles, pulled from the session's tracer.  Cheap
     (a handful of dict reads) and safe on a disabled tracer — everything
-    degenerates to zeros."""
+    degenerates to zeros.  Key set pinned by :data:`PAYLOAD_KEYS` /
+    :data:`REBALANCE_KEYS`."""
     snap = session.tracer.snapshot()
     ops = snap.get("ops", {})
     # barrier time has two sources: explicit DBarrier.enter waits and the
     # accumulator's round barrier — merge them (count sums; quantiles take
     # the slower source, a conservative straggler signal)
     waits = [ops[n] for n in ("barrier.wait", "accumulate.barrier") if n in ops]
+    # lifetime rebalance totals (windows, entries/bytes moved, reader pulls,
+    # open-window flag) — lets the monitor see a live migration.  Built onto
+    # the zero record so the key set never depends on the store's history.
+    totals = getattr(session.store, "migration_totals", dict)()
+    rebalance = {k: totals.get(k, _REBALANCE_ZERO[k]) for k in REBALANCE_KEYS}
+    recorder = getattr(session, "recorder", None)
     return {
         "trace_enabled": snap.get("enabled", False),
+        "record_armed": bool(recorder is not None and recorder.armed),
         "op_rates": {name: row.get("rate_per_s", 0.0)
                      for name, row in ops.items()},
         "barrier_wait_us": {
@@ -36,9 +61,7 @@ def metrics_payload(session) -> Dict[str, Any]:
             "count": sum(w["count"] for w in waits),
         },
         "wire_traffic": session.wire_traffic(),
-        # lifetime rebalance totals (windows, entries/bytes moved, reader
-        # pulls, open-window flag) — lets the monitor see a live migration
-        "rebalance": session.store.migration_totals(),
+        "rebalance": rebalance,
     }
 
 

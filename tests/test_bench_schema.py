@@ -1,0 +1,54 @@
+"""Every committed BENCH_*.json must carry {host, commit, config} provenance.
+
+A benchmark number nobody can trace back to a machine, revision and
+toolchain is a rumor — ``benchmarks.common.write_bench`` stamps the record
+on every write, and this test keeps files produced by older code (or by
+hand) from slipping back in without one.
+"""
+
+import glob
+import json
+import os
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+
+PROVENANCE_KEYS = ("host", "commit", "config")
+
+
+def _bench_files():
+    files = sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json")))
+    assert files, "no BENCH_*.json files found (benchmarks/ moved?)"
+    return files
+
+
+def test_every_bench_file_carries_provenance():
+    for path in _bench_files():
+        with open(path) as f:
+            data = json.load(f)
+        assert isinstance(data, dict), f"{os.path.basename(path)}: not an object"
+        prov = data.get("provenance")
+        assert isinstance(prov, dict), \
+            f"{os.path.basename(path)}: missing provenance record"
+        for key in PROVENANCE_KEYS:
+            assert key in prov, \
+                f"{os.path.basename(path)}: provenance lacks {key!r}"
+        assert isinstance(prov["host"], str) and prov["host"], \
+            f"{os.path.basename(path)}: provenance host must be non-empty"
+        assert isinstance(prov["commit"], str) and prov["commit"], \
+            f"{os.path.basename(path)}: provenance commit must be non-empty"
+        assert isinstance(prov["config"], dict), \
+            f"{os.path.basename(path)}: provenance config must be a dict"
+
+
+def test_write_bench_stamps_provenance(tmp_path):
+    from benchmarks.common import provenance, write_bench
+
+    out = write_bench(str(tmp_path / "BENCH_unit.json"), {"x": 1}, knob=7)
+    data = json.load(open(out))
+    assert data["x"] == 1
+    assert set(PROVENANCE_KEYS) <= set(data["provenance"])
+    assert data["provenance"]["config"]["knob"] == 7
+    # python version always rides along in config
+    assert "python" in data["provenance"]["config"]
+    # provenance() itself never raises and always returns the full key set
+    assert set(PROVENANCE_KEYS) <= set(provenance())

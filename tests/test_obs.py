@@ -1,0 +1,627 @@
+"""step.obs: flight recorder, watchdog anomalies, OpenMetrics export.
+
+Covers the PR's acceptance demos — a seeded stalled migration window and a
+seeded slow-barrier straggler each detected within their deadline, with a
+non-empty flight-recorder dump that round-trips ``json`` — plus the
+satellites: the Hist reservoir late-outlier regression, pinned heartbeat
+payload keys, and metrics read concurrently with an open migration window.
+"""
+
+import importlib.util
+import json
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import telemetry
+from repro.core.session import Session
+from repro.core.telemetry import Hist, RingSink, Tracer
+from repro.obs import (ANOMALY_KINDS, SEVERITIES, Anomaly, FlightRecorder,
+                       Watchdog, as_recorder, openmetrics)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_arms_record_only_and_close_disarms():
+    trc = Tracer(enabled=False)
+    rec = FlightRecorder(capacity=64)
+    rec.attach(trc)
+    assert trc.enabled and trc.record_only and rec.armed
+    assert trc.ring is not None and trc.ring.capacity == 64
+    assert telemetry.armed_count() == 1
+    rec.close()
+    assert not trc.enabled and not trc.record_only and not rec.armed
+    assert telemetry.armed_count() == 0
+
+
+def test_recorder_leaves_user_enabled_tracer_running():
+    trc = Tracer(enabled=True)
+    try:
+        rec = FlightRecorder()
+        rec.attach(trc)
+        assert not trc.record_only          # full tracing continues
+        assert rec.armed                    # but the ring is hung off it
+        rec.close()
+        assert trc.enabled                  # close only undoes what it did
+    finally:
+        trc.disable()
+
+
+def test_ring_sink_bounded_overwrite_oldest():
+    ring = RingSink(capacity=4)
+    for i in range(6):
+        ring.append({"i": i})
+    assert len(ring) == 4 and ring.total == 6
+    assert [e["i"] for e in ring.snapshot()] == [2, 3, 4, 5]
+    with pytest.raises(ValueError):
+        RingSink(capacity=0)
+
+
+def test_record_only_fast_ops_leave_no_events():
+    trc = Tracer(enabled=False)
+    rec = FlightRecorder()
+    rec.attach(trc)
+    try:
+        t0 = trc.now()
+        trc.store_op("get", 0, t0)          # microseconds: under slow_us
+        snap = trc.snapshot()
+        assert snap["events"] == 0          # unbounded list never grows
+        assert snap["ops"]["store.get"]["count"] == 1  # hist still fed
+        trc.mark("migration", "window.open", pending=3)
+        names = [e["name"] for e in rec.events()]
+        assert "window.open" in names       # marks always reach the ring
+    finally:
+        rec.close()
+
+
+def test_record_only_slow_span_reaches_ring():
+    trc = Tracer(enabled=False)
+    rec = FlightRecorder(slow_us=10.0)      # 10µs threshold for the test
+    rec.attach(trc)
+    try:
+        t0 = trc.now()
+        time.sleep(0.005)
+        trc.add_span("store-op", "store.get", t0, trc.now())
+        assert any(e["name"] == "store.get" for e in rec.events())
+        assert trc.snapshot()["events"] == 0
+    finally:
+        rec.close()
+
+
+def test_dump_round_trips_json():
+    trc = Tracer(enabled=False)
+    rec = FlightRecorder()
+    rec.attach(trc)
+    try:
+        trc.mark("lifecycle", "hello", n=1)
+        dump = rec.dump(reason="unit")
+        blob = json.dumps(dump)
+        back = json.loads(blob)
+        assert back["reason"] == "unit"
+        assert back["ring"]["held"] >= 1
+        assert any(e["name"] == "hello" for e in back["events"])
+    finally:
+        rec.close()
+
+
+def test_recorder_export_writes_json(tmp_path):
+    trc = Tracer(enabled=False)
+    rec = FlightRecorder()
+    rec.attach(trc)
+    try:
+        trc.mark("anomaly", "synthetic")
+        path = rec.export(str(tmp_path / "dump.json"), reason="export-test")
+        data = json.load(open(path))
+        assert data["reason"] == "export-test"
+        assert data["events"]
+    finally:
+        rec.close()
+
+
+def test_as_recorder_resolution():
+    assert as_recorder(True).enabled
+    assert not as_recorder(False).enabled
+    assert not as_recorder(None).enabled
+    rec = FlightRecorder(capacity=8)
+    assert as_recorder(rec) is rec
+
+
+def test_session_record_true_end_to_end():
+    sess = Session(backend="host", shards=2, record=True)
+    try:
+        ref = sess.new_array("obs_x", (32,))
+        ref.set(jnp.ones(32))
+        ref.get()
+        m = sess.metrics()
+        assert m["trace"]["record_only"]
+        assert m["trace"]["ring"] is not None
+        assert m["trace"]["ops"]["store.set"]["count"] >= 1
+    finally:
+        sess.recorder.close()
+    assert telemetry.armed_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# Hist reservoir (satellite: late-run outliers must still move p99)
+# ---------------------------------------------------------------------------
+
+
+def test_hist_reservoir_late_outliers_move_p99():
+    h = Hist()
+    for _ in range(100_000):
+        h.add(100.0)
+    snap = h.snapshot()
+    assert snap["p99"] == 100.0
+    # 5k outliers arriving AFTER the 4096-sample reservoir filled: under the
+    # old keep-first-N cap these were invisible; Algorithm R keeps ~4.8% of
+    # the stream as outliers, so p99 (the top 1%) must move
+    for _ in range(5_000):
+        h.add(10_000.0)
+    snap = h.snapshot()
+    assert snap["p99"] == 10_000.0
+    assert snap["p50"] == 100.0             # the median must NOT move
+    assert snap["count"] == 105_000
+    assert snap["max"] == 10_000.0
+
+
+def test_hist_reservoir_deterministic():
+    a, b = Hist(), Hist()
+    vals = [float((i * 37) % 1013) for i in range(20_000)]
+    for v in vals:
+        a.add(v)
+        b.add(v)
+    assert a.snapshot() == b.snapshot()     # seeded xorshift: no run jitter
+
+
+# ---------------------------------------------------------------------------
+# watchdog: the two acceptance demos
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_detects_stalled_migration_window():
+    sess = Session(backend="host", shards=2, record=True)
+    try:
+        for i in range(48):
+            sess.new_array(f"mig{i}", (16,))
+        mig = sess.store.add_shard(drain=False)     # seed the stall
+        assert mig is None or sess.store.migration_window is not None
+        win = sess.store.migration_window
+        assert win is not None and win.remaining > 0
+        wd = sess.watchdog(migration_deadline_s=0.15)
+        assert wd.poll_once() == []                 # first poll: baseline
+        deadline = time.monotonic() + 5.0
+        fired = []
+        while not fired and time.monotonic() < deadline:
+            time.sleep(0.05)
+            fired = wd.poll_once()
+        assert fired, "stalled window not detected within deadline"
+        a = fired[0]
+        assert a.kind == "stalled-migration" and a.severity == "error"
+        assert a.details["remaining"] > 0
+        # the dump is the acceptance artifact: non-empty, json-round-trips
+        assert a.dump is not None and a.dump["events"]
+        assert any(e["name"] == "window.open" for e in a.dump["events"])
+        back = json.loads(json.dumps(a.as_dict()))
+        assert back["kind"] == "stalled-migration"
+        # progress resets the stall clock: drain and verify no re-fire
+        sess.store.drain_window()
+        wd._seen.clear()
+        assert wd.poll_once() == []
+    finally:
+        sess.store.drain_window()
+        sess.recorder.close()
+
+
+def test_watchdog_detects_slow_barrier_straggler():
+    sess = Session(backend="host", record=True)
+    try:
+        bar = sess.barrier(2)                       # seeded straggler: one
+        done = threading.Event()                    # enter, partner never comes
+
+        def straggler():
+            bar.enter(timeout=10.0)
+            done.set()
+
+        t = threading.Thread(target=straggler, daemon=True)
+        t.start()
+        wd = sess.watchdog(min_barrier_slo_us=20_000.0)  # 20ms SLO
+        deadline = time.monotonic() + 5.0
+        fired = []
+        while not fired and time.monotonic() < deadline:
+            time.sleep(0.05)
+            fired = wd.poll_once()
+        assert fired, "straggler not detected within deadline"
+        a = fired[0]
+        assert a.kind == "slow-barrier"
+        assert a.details["wait_us"] >= 20_000.0
+        assert a.details["waiters"] == 1
+        assert a.dump is not None and a.dump["events"]  # anomaly mark at least
+        json.dumps(a.as_dict())
+        bar.enter(timeout=1.0)                      # release the straggler
+        assert done.wait(2.0)
+        t.join(timeout=2.0)
+        assert bar.oldest_wait_start() is None
+    finally:
+        sess.recorder.close()
+
+
+def test_watchdog_slow_semaphore():
+    sess = Session(backend="host", record=True)
+    try:
+        sem = sess.semaphore(1)
+        sem.acquire()
+        blocked = threading.Thread(
+            target=lambda: (sem.acquire(timeout=10.0), sem.release()),
+            daemon=True)
+        blocked.start()
+        wd = sess.watchdog(min_semaphore_slo_us=20_000.0)
+        deadline = time.monotonic() + 5.0
+        fired = []
+        while not fired and time.monotonic() < deadline:
+            time.sleep(0.05)
+            fired = wd.poll_once()
+        assert fired and fired[0].kind == "slow-semaphore"
+        sem.release()
+        blocked.join(timeout=2.0)
+    finally:
+        sess.recorder.close()
+
+
+# ---------------------------------------------------------------------------
+# watchdog: remaining detectors (duck-typed sessions keep these deterministic)
+# ---------------------------------------------------------------------------
+
+
+class _FakeStore:
+    def __init__(self):
+        self.migration_window = None
+        self._tiers = {"promotions": 0, "demotions": 0}
+
+    def tier_stats(self):
+        return dict(self._tiers)
+
+
+class _FakeSession:
+    def __init__(self):
+        self.store = _FakeStore()
+        self.tracer = Tracer(enabled=False)
+        self.recorder = None
+        self._watch_prims = set()
+
+
+def test_watchdog_tier_thrash():
+    sess = _FakeSession()
+    wd = Watchdog(sess, thrash_min_moves=16, cooldown_s=0.0)
+    assert wd.poll_once() == []                     # baseline window
+    sess.store._tiers = {"promotions": 40, "demotions": 38}
+    fired = wd.poll_once()
+    assert [a.kind for a in fired] == ["tier-thrash"]
+    assert fired[0].details["promotions"] == 40
+    # one-sided movement (a legitimate spill) is NOT thrash
+    sess.store._tiers = {"promotions": 40, "demotions": 138}
+    assert wd.poll_once() == []
+
+
+def test_watchdog_lock_wait_outlier():
+    sess = _FakeSession()
+    trc = sess.tracer
+    for sid in range(3):                            # three quiet shards
+        for _ in range(50):
+            trc.observe("store.lock_wait", 10.0, shard=sid)
+    for _ in range(50):                             # one hot shard
+        trc.observe("store.lock_wait", 90_000.0, shard=3)
+    wd = Watchdog(sess, min_lock_wait_us=1_000.0, lock_wait_factor=8.0)
+    fired = wd.poll_once()
+    assert [a.kind for a in fired] == ["lock-wait-outlier"]
+    assert fired[0].details["shard"] == 3
+    assert fired[0].details["p99_us"] >= 90_000.0
+
+
+def test_watchdog_cooldown_dedups_repeat_fires():
+    sess = _FakeSession()
+    wd = Watchdog(sess, thrash_min_moves=16, cooldown_s=60.0)
+    wd.poll_once()
+    sess.store._tiers = {"promotions": 40, "demotions": 38}
+    assert len(wd.poll_once()) == 1
+    sess.store._tiers = {"promotions": 80, "demotions": 76}
+    assert wd.poll_once() == []                     # same incident, cooled down
+
+
+def test_watchdog_dump_dir_writes_anomaly_files(tmp_path):
+    sess = Session(backend="host", record=True)
+    try:
+        for i in range(48):
+            sess.new_array(f"dd{i}", (8,))
+        sess.store.add_shard(drain=False)
+        wd = sess.watchdog(migration_deadline_s=0.05,
+                           dump_dir=str(tmp_path))
+        wd.poll_once()
+        time.sleep(0.1)
+        fired = wd.poll_once()
+        assert fired
+        path = fired[0].details["dump_path"]
+        assert os.path.exists(path)
+        data = json.load(open(path))                # acceptance: json.load
+        assert data["kind"] == "stalled-migration"
+        assert data["dump"]["events"]
+    finally:
+        sess.store.drain_window()
+        sess.recorder.close()
+
+
+def test_watchdog_daemon_thread_lifecycle():
+    sess = _FakeSession()
+    with Watchdog(sess, interval_s=0.01) as wd:
+        time.sleep(0.05)
+        assert wd._thread is not None and wd._thread.is_alive()
+    assert wd._thread is None
+
+
+def test_anomaly_catalogue_is_stable():
+    assert ANOMALY_KINDS == ("stalled-migration", "slow-barrier",
+                             "slow-semaphore", "tier-thrash",
+                             "lock-wait-outlier", "dead-heartbeat")
+    assert SEVERITIES == ("warning", "error", "critical")
+    a = Anomaly(kind="tier-thrash", severity="warning", message="m",
+                detected_at=0.0)
+    assert a.as_dict()["dump"] is None
+
+
+# ---------------------------------------------------------------------------
+# ft integration: heartbeat escalation + recovery black box
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_dead_heartbeat_escalation():
+    from repro.ft import HeartbeatMonitor, metrics_payload
+
+    sess = Session(backend="host", record=True)
+    try:
+        recovered = []
+        mon = HeartbeatMonitor([0, 1], timeout=10.0,
+                               on_failure=recovered.append)
+        wd = sess.watchdog()
+        wd.watch_heartbeats(mon)
+        mon.beat(1, metrics_payload(sess))
+        mon.declare_dead(1)
+        assert recovered == [[1]]                   # original callback ran
+        assert [a.kind for a in wd.anomalies] == ["dead-heartbeat"]
+        a = wd.anomalies[0]
+        assert a.severity == "critical"
+        assert a.details["node"] == 1
+        assert a.details["last_payload"]["record_armed"] is True
+        assert a.dump is not None
+    finally:
+        sess.recorder.close()
+
+
+def test_session_recovery_attaches_flight_dump():
+    from repro.ft import session_recovery
+
+    sess = Session(backend="host", n_nodes=2, threads_per_node=1, record=True)
+    new_sess = None
+    try:
+        sess.new_array("theta", (16,)).set(jnp.zeros(16))
+        plan, new_sess = session_recovery(sess, [1])
+        assert plan.flight_dump is not None
+        assert plan.flight_dump["reason"] == "session-recovery"
+        # the recovery mark is the dump's last breadcrumb
+        assert any(e["name"] == "session_recovery"
+                   for e in plan.flight_dump["events"])
+        json.dumps(plan.flight_dump)
+        # the replacement session adopts the same armed recorder
+        assert new_sess.recorder is sess.recorder
+        assert new_sess.recorder.armed
+    finally:
+        (new_sess or sess).recorder.close()
+    assert telemetry.armed_count() == 0
+
+
+def test_session_recovery_without_recorder_has_no_dump():
+    from repro.ft import session_recovery
+
+    sess = Session(backend="host", n_nodes=2, threads_per_node=1)
+    plan, new_sess = session_recovery(sess, [1])
+    assert plan.flight_dump is None
+    assert not new_sess.recorder.armed
+
+
+def test_metrics_payload_keys_pinned():
+    from repro.ft import PAYLOAD_KEYS, REBALANCE_KEYS, metrics_payload
+
+    sess = Session(backend="host", shards=2)
+    payload = metrics_payload(sess)
+    assert tuple(payload.keys()) == PAYLOAD_KEYS
+    assert tuple(payload["rebalance"].keys()) == REBALANCE_KEYS
+    assert payload["trace_enabled"] is False
+    assert payload["record_armed"] is False
+    # a store that never migrated still emits the full zeroed record
+    assert payload["rebalance"]["windows"] == 0
+    assert payload["rebalance"]["open"] is False
+
+
+def test_metrics_payload_rebalance_keys_without_migration_support():
+    from repro.ft import REBALANCE_KEYS, metrics_payload
+
+    class _BareStore:                      # no migration_totals at all
+        pass
+
+    class _BareSession:
+        store = _BareStore()
+        tracer = Tracer(enabled=False)
+        recorder = None
+
+        def wire_traffic(self):
+            return 0
+
+    payload = metrics_payload(_BareSession())
+    assert tuple(payload["rebalance"].keys()) == REBALANCE_KEYS
+    assert payload["rebalance"]["pending"] == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics under a live migration window (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_concurrent_with_open_migration_window():
+    sess = Session(backend="host", shards=4, trace=True)
+    try:
+        for i in range(64):
+            sess.new_array(f"cw{i}", (32,))
+        sess.store.add_shard(drain=False)
+        assert sess.store.migration_window is not None
+
+        moved_seq, errors = [], []
+
+        def poller():
+            try:
+                for _ in range(200):
+                    m = sess.metrics()
+                    mig = m["tiers"]["migration"]
+                    moved_seq.append((mig["entries_moved"], mig["pulled"]))
+                    assert isinstance(m["shards"], dict)
+            except Exception as e:  # pragma: no cover - the failure signal
+                errors.append(e)
+
+        t = threading.Thread(target=poller)
+        t.start()
+        while sess.store.migration_window is not None:
+            sess.store.migrate_step(2)              # drain concurrently
+        t.join(timeout=30)
+        assert not errors, f"metrics raced the window: {errors[0]!r}"
+        # counters must be monotonic across the drain
+        assert moved_seq == sorted(moved_seq)
+        m = sess.metrics()
+        assert m["tiers"]["migration"]["open"] is False
+        assert m["tiers"]["migration"]["entries_moved"] >= 1
+    finally:
+        sess.tracer.disable()
+
+
+def test_metrics_tiers_section_with_cold_tier():
+    # the hot budget is per shard: 1KiB holds exactly one 256-float entry,
+    # so any shard owning two or more names must have spilled
+    sess = Session(backend="host", shards=2, cold_tier="host",
+                   cold_budget=1 << 10)
+    for i in range(8):
+        sess.new_array(f"tz{i}", (256,)).set(jnp.ones(256))
+    tiers = sess.metrics()["tiers"]
+    assert tiers["kind"] == "host"
+    assert tiers["demotions"] >= 1                  # budget forced spills
+    assert tiers["cold_entries"] >= 1
+    assert tiers["hot"]["bytes"] <= 2 * (1 << 10)
+
+
+# ---------------------------------------------------------------------------
+# OpenMetrics exporter
+# ---------------------------------------------------------------------------
+
+
+def test_openmetrics_from_live_session():
+    sess = Session(backend="host", shards=2, record=True)
+    try:
+        ref = sess.new_array("om", (64,))
+        ref.set(jnp.ones(64))
+        ref.get()
+        text = sess.openmetrics()
+        assert text.endswith("# EOF\n")
+        assert "# TYPE step_store_gets counter" in text
+        assert "step_store_gets_total " in text
+        assert 'step_shard_store_gets_total{shard="0"}' in text
+        assert "step_trace_record_only 1" in text
+        assert "step_recorder_ring_capacity" in text
+        assert 'step_op_latency_us{op="store.set",quantile="0.99"}' in text
+        # TYPE/HELP emitted once per family even with per-shard samples
+        assert text.count("# TYPE step_shard_store_gets counter") == 1
+    finally:
+        sess.recorder.close()
+
+
+def test_openmetrics_defensive_on_empty_metrics():
+    text = openmetrics({})
+    assert text.endswith("# EOF\n")
+    assert "step_store_gets_total 0" in text
+    assert "step_migration_open 0" in text
+
+
+def test_openmetrics_anomaly_counter_and_escaping():
+    text = openmetrics({}, anomalies=[
+        Anomaly(kind="tier-thrash", severity="warning", message="m",
+                detected_at=0.0),
+        {"kind": 'we"ird\nkind'},
+        {"kind": "tier-thrash"},
+    ])
+    assert 'step_anomalies_total{kind="tier-thrash"} 2' in text
+    assert r'step_anomalies_total{kind="we\"ird\nkind"} 1' in text
+
+
+def test_openmetrics_custom_prefix():
+    text = openmetrics({}, prefix="acme")
+    assert "# TYPE acme_info gauge" in text
+    assert "step_" not in text
+
+
+# ---------------------------------------------------------------------------
+# step_top renderer (pure function of snapshots)
+# ---------------------------------------------------------------------------
+
+
+def _load_step_top():
+    path = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                        "step_top.py")
+    spec = importlib.util.spec_from_file_location("step_top", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_step_top_render_is_pure():
+    st = _load_step_top()
+    cur = {
+        "backend": "host", "wire_traffic": 5,
+        "trace": {"enabled": True, "record_only": True,
+                  "ring": {"held": 7, "capacity": 64, "total": 7},
+                  "ops": {"store.get": {"count": 300, "p50": 10.0,
+                                        "p99": 50.0, "max": 80.0,
+                                        "rate_per_s": 10.0}},
+                  "ops_by_shard": {"store.lock_wait": {
+                      0: {"count": 5, "p50": 1.0, "p99": 2.0}}}},
+        "tiers": {"hot": {"entries": 3, "bytes": 2048.0}, "cold": {"bytes": 0},
+                  "cold_entries": 0, "promotions": 1, "demotions": 2,
+                  "migration": {"open": True, "pending": 4, "windows": 1,
+                                "entries_moved": 9, "bytes_moved": 100,
+                                "pulled": 2}},
+    }
+    prev = json.loads(json.dumps(cur))
+    prev["trace"]["ops"]["store.get"]["count"] = 100
+    frame = st.render(cur, prev, dt=2.0,
+                      anomalies=[{"kind": "tier-thrash", "message": "churn"}])
+    assert "obs=record ring=7/64" in frame
+    assert "store.get" in frame and "100.0" in frame   # (300-100)/2 ops/s
+    assert "OPEN pending=4" in frame
+    assert "[tier-thrash] churn" in frame
+    # rendering must not mutate its inputs
+    assert cur["trace"]["ops"]["store.get"]["count"] == 300
+
+
+def test_step_top_render_empty_metrics():
+    st = _load_step_top()
+    frame = st.render({})
+    assert "step_top" in frame and "obs=off" in frame
+
+
+def test_step_top_rate_falls_back_to_lifetime():
+    st = _load_step_top()
+    cur = {"trace": {"ops": {"store.get": {"count": 10, "p50": 1.0,
+                                           "p99": 2.0, "max": 3.0,
+                                           "rate_per_s": 42.0}}}}
+    assert st._rate(cur, None, "store.get", 1.0) == 42.0
+    prev = {"trace": {"ops": {"store.get": {"count": 4}}}}
+    assert st._rate(cur, prev, "store.get", 2.0) == 3.0
